@@ -1,0 +1,103 @@
+"""Benchmark harness entry point: one function per paper table/figure.
+
+  table1        -- the paper's Table I (II/MII/util/time/speedup, 6 kernels)
+  mapper_sweep  -- II vs MII across cluster variants (the architecture-
+                   exploration use-case of the ADL)
+  kernel_micro  -- Pallas kernels: us/call in interpret mode (correctness
+                   harness timing; real perf comes from the roofline)
+  sim_throughput-- JAX simulator cycles/s (the Verilator-replacement claim)
+
+Prints ``name,us_per_call,derived`` CSV rows per benchmark.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+def bench_table1() -> None:
+    from . import table1
+    table1.main()
+
+
+def bench_mapper_sweep() -> None:
+    from repro.core.adl import cluster_4x4
+    from repro.core.kernels_lib import build_gemm
+    from repro.core.mapper import MapError, map_kernel
+
+    for rf in (4, 8, 16):
+        for unroll in (1, 2, 4):
+            arch = cluster_4x4(regfile=rf)
+            spec = build_gemm(TI=6, TK=8, TJ=6, unroll=unroll, arch=arch)
+            t0 = time.time()
+            try:
+                m = map_kernel(spec.dfg, arch, spec.layout, ii_max=24,
+                               seeds=range(4), time_budget_s=60)
+                print(f"mapper_rf{rf}_u{unroll},"
+                      f"{(time.time()-t0)*1e6:.0f},"
+                      f"II={m.II};MII={m.mii};util={m.utilization:.3f}")
+            except MapError:
+                print(f"mapper_rf{rf}_u{unroll},"
+                      f"{(time.time()-t0)*1e6:.0f},unmapped")
+
+
+def bench_kernel_micro() -> None:
+    import jax.numpy as jnp
+    from repro.kernels.gemm_os.ops import gemm_os
+    from repro.kernels.decode_attn.ops import decode_attn
+
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.normal(size=(256, 256)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(256, 256)), jnp.float32)
+    gemm_os(a, b, interpret=True).block_until_ready()
+    t0 = time.time()
+    for _ in range(3):
+        gemm_os(a, b, interpret=True).block_until_ready()
+    print(f"gemm_os_256_interpret,{(time.time()-t0)/3*1e6:.0f},"
+          f"flops={2*256**3}")
+
+    q = jnp.asarray(rng.normal(size=(2, 8, 64)), jnp.float32)
+    kv = jnp.asarray(rng.normal(size=(2, 2, 512, 64)), jnp.float32)
+    lens = jnp.asarray([512, 300])
+    decode_attn(q, kv, kv, lens, bs=128, interpret=True).block_until_ready()
+    t0 = time.time()
+    for _ in range(3):
+        decode_attn(q, kv, kv, lens, bs=128,
+                    interpret=True).block_until_ready()
+    print(f"decode_attn_interpret,{(time.time()-t0)/3*1e6:.0f},kv=512")
+
+
+def bench_sim_throughput() -> None:
+    from repro.core.config_gen import generate_config
+    from repro.core.kernels_lib import build_gemm
+    from repro.core.mapper import map_kernel
+    from repro.core.simulator import simulate
+    from repro.core.verify import generate_test_data
+
+    spec = build_gemm(TI=6, TK=8, TJ=6, unroll=1)
+    m = map_kernel(spec.dfg, spec.arch, spec.layout)
+    cfg = generate_config(m, spec.layout)
+    data = generate_test_data(spec)
+    n_cycles = cfg.n_cycles(spec.mapped_iters) * len(spec.invocations)
+    simulate(cfg, data.init_banks, spec.invocations, spec.mapped_iters)
+    t0 = time.time()
+    simulate(cfg, data.init_banks, spec.invocations, spec.mapped_iters)
+    dt = time.time() - t0
+    print(f"simulator_gemm,{dt*1e6:.0f},cycles={n_cycles};"
+          f"cycles_per_s={n_cycles/dt:.0f}")
+
+
+def main() -> None:
+    print("# === Table I (paper reproduction) ===")
+    bench_table1()
+    print("# === mapper sweep (ADL design-space exploration) ===")
+    bench_mapper_sweep()
+    print("# === Pallas kernel micro (interpret mode) ===")
+    bench_kernel_micro()
+    print("# === simulator throughput ===")
+    bench_sim_throughput()
+
+
+if __name__ == "__main__":
+    main()

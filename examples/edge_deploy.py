@@ -1,0 +1,44 @@
+"""Edge-deployment analyzer: apply the paper's CGRA compilation flow to
+the GEMM micro-kernels of any assigned LM architecture.
+
+For each projection/FFN GEMM site of the model, tile it onto the Morpher
+4x4 cluster (output-stationary, paper section IV-A), run the real modulo-
+scheduling mapper, and report II / MII / utilization / estimated tile
+latency — Table-I methodology applied to the model zoo.
+
+Run:  PYTHONPATH=src python examples/edge_deploy.py --arch llama3.2-1b
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.configs.registry import ARCH_IDS
+from repro.core.offload import analyze_arch_gemms, model_gemm_sites
+from repro.configs.registry import get_config
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b", choices=ARCH_IDS)
+    ap.add_argument("--tokens", type=int, default=64)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    print(f"arch: {args.arch} ({cfg.family}); "
+          f"per-layer GEMM sites at {args.tokens} tokens:")
+    for s in model_gemm_sites(cfg, args.tokens):
+        print(f"  {s.name:<10} {s.M}x{s.K}x{s.N}  x{s.count_per_layer}")
+
+    print("\nCGRA mapping of the shared on-chip tile "
+          "(16x8x16, output-stationary, unroll 4):")
+    reports = analyze_arch_gemms(args.arch, tokens=args.tokens)
+    print(f"{'site':<10} {'nodes':>5} {'II':>3} {'MII':>4} {'util':>7} "
+          f"{'tile_us':>8}")
+    for r in reports:
+        print(f"{r.site:<10} {r.nodes:>5} {r.II:>3} {r.mii:>4} "
+              f"{r.utilization*100:6.1f}% {r.est_tile_us:8.1f}")
+
+
+if __name__ == "__main__":
+    main()

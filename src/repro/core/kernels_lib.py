@@ -1,0 +1,399 @@
+"""ML micro-kernel library: the paper's Listings 1-5 as DFG builders.
+
+Each builder returns a :class:`KernelSpec` — the DFG of the mapped loop
+level, the bank data layout, the host-side invocation schedule (outer
+sequential loops that stay on the host processor, exactly as in the paper's
+tiled dataflow), and a numpy golden model.
+
+Variants (paper Table I):
+  GEMM        base: innermost k loop mapped, (i, j) live-ins per invocation
+  GEMM-U      k-loop unrolled by 4 (Listing 3)
+  GEMM-U-C    all three loops coalesced into one (Listing 4)
+  CONV        base: innermost k2 loop mapped, (c, i, j, k1) live-ins
+  CONV-U-C-1  k1/k2 fully unrolled (K=3), innermost spatial loop mapped
+  CONV-U-C-2  all loops coalesced (Listing 5)
+
+Addressing is bank-local: LOAD/STORE nodes target ``bank<N>`` pseudo-arrays
+and the data layout's base offsets are folded into the address arithmetic,
+mirroring Morpher's co-generated data layout.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .adl import CGRAArch, cluster_4x4
+from .dfg import DFG, DFGBuilder, Op, Operand
+from .layout import ArrayDecl, DataLayout, Placement, assign_layout
+
+
+# --------------------------------------------------------------------------
+@dataclass
+class KernelSpec:
+    name: str
+    dfg: DFG
+    arch: CGRAArch
+    layout: DataLayout
+    mapped_iters: int                     # iterations of the mapped loop per invocation
+    invocations: List[Dict[str, int]]     # live-in values per invocation
+    golden: Callable[[Dict[str, np.ndarray]], Dict[str, np.ndarray]]
+    init_banks: Callable[[np.random.Generator], Dict[str, np.ndarray]]
+    # cost-model metadata (full-problem dims; see costmodel.py)
+    meta: Dict[str, int] = field(default_factory=dict)
+
+    def bank_images(self, rng: np.random.Generator) -> Dict[str, np.ndarray]:
+        return self.init_banks(rng)
+
+
+def _bank_arrays(layout: DataLayout) -> Dict[str, np.ndarray]:
+    return {f"bank{i}": np.zeros(w, dtype=np.int64)
+            for i, w in enumerate(layout.bank_image_size())}
+
+
+def _wrap16(x: np.ndarray) -> np.ndarray:
+    x = np.asarray(x, dtype=np.int64)
+    x = ((x + (1 << 15)) & 0xFFFF) - (1 << 15)
+    return x
+
+
+# ======================================================================
+# GEMM  (Listings 1, 3, 4): O[TI,TJ] += W[TI,TK] @ I[TK,TJ]
+# ======================================================================
+def _gemm_layout(arch: CGRAArch, TI: int, TK: int, TJ: int) -> DataLayout:
+    """Output-stationary layout.  Preferred: W+O on bank0, I on bank1 (the
+    accumulator recurrence and the weight stream share a port budget).
+    When the O tile fills a whole bank (the paper's 64x16x64 tile has an
+    8 kB O == one full bank), O gets bank0 alone and W streams with I."""
+    try:
+        return assign_layout(arch, [
+            ArrayDecl("W", TI * TK, bank_pref=0),
+            ArrayDecl("O", TI * TJ, bank_pref=0),
+            ArrayDecl("I", TK * TJ, bank_pref=1),
+        ])
+    except ValueError:
+        return assign_layout(arch, [
+            ArrayDecl("O", TI * TJ, bank_pref=0),
+            ArrayDecl("W", TI * TK, bank_pref=1),
+            ArrayDecl("I", TK * TJ, bank_pref=1),
+        ])
+
+
+def _gemm_init(layout: DataLayout, TI: int, TK: int, TJ: int, lo=-8, hi=8):
+    def init(rng: np.random.Generator) -> Dict[str, np.ndarray]:
+        banks = _bank_arrays(layout)
+        W = rng.integers(lo, hi, size=TI * TK)
+        I = rng.integers(lo, hi, size=TK * TJ)
+        pw, pi, po = (layout.placements[k] for k in ("W", "I", "O"))
+        banks[pw.bank_array][pw.base:pw.base + pw.words] = W
+        banks[pi.bank_array][pi.base:pi.base + pi.words] = I
+        banks[po.bank_array][po.base:po.base + po.words] = 0
+        return banks
+    return init
+
+
+def _gemm_golden(layout: DataLayout, TI: int, TK: int, TJ: int):
+    def golden(banks: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
+        out = {k: v.copy() for k, v in banks.items()}
+        pw, pi, po = (layout.placements[k] for k in ("W", "I", "O"))
+        W = banks[pw.bank_array][pw.base:pw.base + pw.words].reshape(TI, TK)
+        I = banks[pi.bank_array][pi.base:pi.base + pi.words].reshape(TK, TJ)
+        O = banks[po.bank_array][po.base:po.base + po.words].reshape(TI, TJ)
+        O = _wrap16(O + W @ I)
+        out[po.bank_array][po.base:po.base + po.words] = O.reshape(-1)
+        return out
+    return golden
+
+
+def build_gemm(TI: int = 64, TK: int = 16, TJ: int = 64,
+               arch: Optional[CGRAArch] = None,
+               unroll: int = 1, coalesced: bool = False) -> KernelSpec:
+    """GEMM micro-kernel on one CGRA cluster (output-stationary).
+
+    unroll=1, coalesced=False  -> base GEMM (map the k loop)
+    unroll=4, coalesced=False  -> GEMM-U   (Listing 3)
+    unroll=4, coalesced=True   -> GEMM-U-C (Listing 4)
+    """
+    arch = arch or cluster_4x4()
+    assert TK % unroll == 0
+    layout = _gemm_layout(arch, TI, TK, TJ)
+    pw, pi, po = (layout.placements[k] for k in ("W", "I", "O"))
+    U = unroll
+
+    b = DFGBuilder(f"gemm{'-u' if U > 1 else ''}{'-c' if coalesced else ''}")
+    cU = b.const(U)
+
+    if not coalesced:
+        i = b.livein("i")
+        j = b.livein("j")
+        # induction: k = prev + U  (init -U so iteration 0 sees k=0)
+        k = b.add(Operand(0, 0), cU, name="k")  # placeholder, patched below
+        b.dfg.nodes[k].operands = (Operand(k, dist=1, init=-U), Operand(cU))
+        # loop guard (the exit branch the LLVM pass would emit)
+        b.cmpge(k, b.const(TK - U), name="exit")
+    else:
+        # Listing 4: single coalesced loop; i/j/k are register-carried.
+        cTK = b.const(TK)
+        cTJ_b = b.const(TJ)
+        c0 = b.const(0)
+        c1 = b.const(1)
+        knew = b.add(Operand(0, 0), cU, name="knew")
+        kwrap = b.cmpge(knew, cTK, name="kwrap")
+        k = b.select(kwrap, c0, knew, name="k")
+        b.dfg.nodes[knew].operands = (Operand(k, dist=1, init=-U), Operand(cU))
+        jnew = b.add(Operand(0, 0), c1, name="jnew")
+        jwrap = b.cmpge(jnew, cTJ_b, name="jwrap")
+        jsel = b.select(jwrap, c0, jnew, name="jsel")
+        j = b.select(kwrap, jsel, Operand(0, 0), name="j")
+        b.dfg.nodes[jnew].operands = (Operand(j, dist=1, init=0), Operand(c1))
+        b.dfg.nodes[j].operands = (b.dfg.nodes[j].operands[0],
+                                   b.dfg.nodes[j].operands[1],
+                                   Operand(j, dist=1, init=0))
+        land = b.op(Op.AND, kwrap, jwrap, name="ijcarry")
+        inew = b.add(Operand(0, 0), c1, name="inew")
+        i = b.select(land, inew, Operand(0, 0), name="i")
+        b.dfg.nodes[inew].operands = (Operand(i, dist=1, init=0), Operand(c1))
+        b.dfg.nodes[i].operands = (b.dfg.nodes[i].operands[0],
+                                   b.dfg.nodes[i].operands[1],
+                                   Operand(i, dist=1, init=0))
+
+    # ---- body: O[i][j] += sum_u W[i][k+u] * I[k+u][j]
+    wrow = b.mul(i, b.const(TK), name="wrow")
+    wa0 = b.add(wrow, k, name="wa0")
+    if pw.base:
+        wa0 = b.add(wa0, b.const(pw.base))
+    waddrs = [wa0] + [b.add(wa0, b.const(u), name=f"wa{u}") for u in range(1, U)]
+    wl = [b.load(pw.bank_array, wa, name=f"w{u}") for u, wa in enumerate(waddrs)]
+
+    irow = b.mul(k, b.const(TJ), name="irow")
+    ia0 = b.add(irow, j, name="ia0")
+    if pi.base:
+        ia0 = b.add(ia0, b.const(pi.base))
+    iaddrs = [ia0] + [b.add(ia0, b.const(u * TJ), name=f"ia{u}")
+                      for u in range(1, U)]
+    il = [b.load(pi.bank_array, ia, name=f"i{u}") for u, ia in enumerate(iaddrs)]
+
+    prods = [b.mul(wl[u], il[u], name=f"p{u}") for u in range(U)]
+    # reduction tree
+    while len(prods) > 1:
+        nxt = [b.add(prods[t], prods[t + 1]) for t in range(0, len(prods) - 1, 2)]
+        if len(prods) % 2:
+            nxt.append(prods[-1])
+        prods = nxt
+    psum = prods[0]
+
+    orow = b.mul(i, b.const(TJ), name="orow")
+    oaddr = b.add(orow, j, name="oaddr")
+    if po.base:
+        oaddr = b.add(oaddr, b.const(po.base))
+    oval = b.load(po.bank_array, oaddr, name="oval")
+    acc = b.add(oval, psum, name="acc")
+    st = b.store(po.bank_array, oaddr, acc, name="ost")
+    b.mem_dep(st, oval, dist=1)
+
+    dfg = b.build()
+
+    if coalesced:
+        mapped_iters = TI * TJ * (TK // U)
+        invocations: List[Dict[str, int]] = [{}]
+    else:
+        mapped_iters = TK // U
+        invocations = [{"i": ii, "j": jj} for ii in range(TI) for jj in range(TJ)]
+
+    return KernelSpec(
+        name=dfg.name, dfg=dfg, arch=arch, layout=layout,
+        mapped_iters=mapped_iters, invocations=invocations,
+        golden=_gemm_golden(layout, TI, TK, TJ),
+        init_banks=_gemm_init(layout, TI, TK, TJ),
+        meta=dict(TI=TI, TK=TK, TJ=TJ, unroll=U, coalesced=int(coalesced),
+                  macs_per_iter=U, liveins_per_inv=0 if coalesced else 2),
+    )
+
+
+# ======================================================================
+# CONV (Listing 2, 5): O[c,i,j] += I[i+k1, j+k2] * W[c,k1,k2]   (valid)
+#   tile: one output channel resident at a time (TCo = 1 in Table I).
+# ======================================================================
+def _conv_layout(arch: CGRAArch, IH: int, IW: int, OH: int, OW: int,
+                 K: int) -> DataLayout:
+    return assign_layout(arch, [
+        ArrayDecl("O", OH * OW, bank_pref=0),
+        ArrayDecl("W", K * K, bank_pref=0),
+        ArrayDecl("I", IH * IW, bank_pref=1),
+    ])
+
+
+def build_conv(OH: int = 62, OW: int = 62, K: int = 3,
+               IH: Optional[int] = None, IW: Optional[int] = None,
+               arch: Optional[CGRAArch] = None,
+               variant: str = "base") -> KernelSpec:
+    """CONV micro-kernel (single input channel -> one output channel tile).
+
+    variant: "base"  -- map the innermost k2 loop (live-ins i, j, k1)
+             "uc1"   -- k1/k2 fully unrolled, map the j loop (live-in i)
+             "uc2"   -- all spatial loops coalesced (Listing 5)
+    """
+    arch = arch or cluster_4x4()
+    IH = IH if IH is not None else OH + K - 1
+    IW = IW if IW is not None else OW + K - 1
+    layout = _conv_layout(arch, IH, IW, OH, OW, K)
+    pw, pi, po = (layout.placements[k] for k in ("W", "I", "O"))
+
+    b = DFGBuilder(f"conv-{variant}")
+
+    if variant == "base":
+        i = b.livein("i")
+        j = b.livein("j")
+        k1 = b.livein("k1")
+        c1 = b.const(1)
+        k2 = b.add(Operand(0, 0), c1, name="k2")
+        b.dfg.nodes[k2].operands = (Operand(k2, dist=1, init=-1), Operand(c1))
+        b.cmpge(k2, b.const(K - 1), name="exit")
+
+        r = b.add(i, k1, name="r")
+        rm = b.mul(r, b.const(IW), name="rm")
+        cc = b.add(j, k2, name="cc")
+        ia = b.add(rm, cc, name="ia")
+        if pi.base:
+            ia = b.add(ia, b.const(pi.base))
+        ival = b.load(pi.bank_array, ia, name="ival")
+
+        wr = b.mul(k1, b.const(K), name="wr")
+        wa = b.add(wr, k2, name="wa")
+        if pw.base:
+            wa = b.add(wa, b.const(pw.base))
+        wval = b.load(pw.bank_array, wa, name="wval")
+
+        prod = b.mul(ival, wval, name="prod")
+        om = b.mul(i, b.const(OW), name="om")
+        oa = b.add(om, j, name="oa")
+        if po.base:
+            oa = b.add(oa, b.const(po.base))
+        oval = b.load(po.bank_array, oa, name="oval")
+        acc = b.add(oval, prod, name="acc")
+        st = b.store(po.bank_array, oa, acc, name="ost")
+        b.mem_dep(st, oval, dist=1)
+
+        mapped_iters = K
+        invocations = [{"i": ii, "j": jj, "k1": kk}
+                       for ii in range(OH) for jj in range(OW)
+                       for kk in range(K)]
+        liveins_per_inv = 3
+
+    elif variant in ("uc1", "uc2"):
+        c1 = b.const(1)
+        c0 = b.const(0)
+        if variant == "uc1":
+            i = b.livein("i")
+            j = b.add(Operand(0, 0), c1, name="j")
+            b.dfg.nodes[j].operands = (Operand(j, dist=1, init=-1), Operand(c1))
+            b.cmpge(j, b.const(OW - 1), name="exit")
+        else:
+            # Listing 5: coalesce (i, j) into one induction chain.
+            jnew = b.add(Operand(0, 0), c1, name="jnew")
+            jwrap = b.cmpge(jnew, b.const(OW), name="jwrap")
+            j = b.select(jwrap, c0, jnew, name="j")
+            b.dfg.nodes[jnew].operands = (Operand(j, dist=1, init=-1),
+                                          Operand(c1))
+            inew = b.add(Operand(0, 0), c1, name="inew")
+            i = b.select(jwrap, inew, Operand(0, 0), name="i")
+            b.dfg.nodes[inew].operands = (Operand(i, dist=1, init=0),
+                                          Operand(c1))
+            b.dfg.nodes[i].operands = (b.dfg.nodes[i].operands[0],
+                                       b.dfg.nodes[i].operands[1],
+                                       Operand(i, dist=1, init=0))
+
+        # fully unrolled K x K MACs
+        om = b.mul(i, b.const(OW), name="om")
+        oa = b.add(om, j, name="oa")
+        if po.base:
+            oa = b.add(oa, b.const(po.base))
+        oval = b.load(po.bank_array, oa, name="oval")
+
+        prods = []
+        for kk1 in range(K):
+            r = b.add(i, b.const(kk1), name=f"r{kk1}") if kk1 else i
+            rm = b.mul(r, b.const(IW), name=f"rm{kk1}")
+            for kk2 in range(K):
+                cc = b.add(j, b.const(kk2), name=f"cc{kk2}") if kk2 else j
+                ia = b.add(rm, cc, name=f"ia{kk1}{kk2}")
+                if pi.base:
+                    ia = b.add(ia, b.const(pi.base))
+                ival = b.load(pi.bank_array, ia, name=f"iv{kk1}{kk2}")
+                widx = pw.base + kk1 * K + kk2
+                wval = b.load(pw.bank_array, b.const(widx),
+                              name=f"wv{kk1}{kk2}")
+                prods.append(b.mul(ival, wval, name=f"p{kk1}{kk2}"))
+        while len(prods) > 1:
+            nxt = [b.add(prods[t], prods[t + 1])
+                   for t in range(0, len(prods) - 1, 2)]
+            if len(prods) % 2:
+                nxt.append(prods[-1])
+            prods = nxt
+
+        acc = b.add(oval, prods[0], name="acc")
+        st = b.store(po.bank_array, oa, acc, name="ost")
+        b.mem_dep(st, oval, dist=1)
+
+        if variant == "uc1":
+            mapped_iters = OW
+            invocations = [{"i": ii} for ii in range(OH)]
+            liveins_per_inv = 1
+        else:
+            mapped_iters = OH * OW
+            invocations = [{}]
+            liveins_per_inv = 0
+    else:
+        raise ValueError(variant)
+
+    dfg = b.build()
+
+    def init_banks(rng: np.random.Generator) -> Dict[str, np.ndarray]:
+        banks = _bank_arrays(layout)
+        banks[pi.bank_array][pi.base:pi.base + pi.words] = \
+            rng.integers(-8, 8, size=IH * IW)
+        banks[pw.bank_array][pw.base:pw.base + pw.words] = \
+            rng.integers(-4, 4, size=K * K)
+        banks[po.bank_array][po.base:po.base + po.words] = 0
+        return banks
+
+    def golden(banks: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
+        out = {k: v.copy() for k, v in banks.items()}
+        I = banks[pi.bank_array][pi.base:pi.base + pi.words].reshape(IH, IW)
+        W = banks[pw.bank_array][pw.base:pw.base + pw.words].reshape(K, K)
+        O = banks[po.bank_array][po.base:po.base + po.words].reshape(OH, OW)
+        O = O.astype(np.int64)
+        for kk1 in range(K):
+            for kk2 in range(K):
+                O = O + I[kk1:kk1 + OH, kk2:kk2 + OW] * W[kk1, kk2]
+        out[po.bank_array][po.base:po.base + po.words] = _wrap16(O).reshape(-1)
+        return out
+
+    return KernelSpec(
+        name=dfg.name, dfg=dfg, arch=arch, layout=layout,
+        mapped_iters=mapped_iters, invocations=invocations,
+        golden=golden, init_banks=init_banks,
+        meta=dict(OH=OH, OW=OW, K=K, IH=IH, IW=IW,
+                  liveins_per_inv=liveins_per_inv),
+    )
+
+
+# ----------------------------------------------------------------- registry
+def table1_kernels(small: bool = False) -> Dict[str, KernelSpec]:
+    """The six Table-I kernels.  ``small=True`` returns reduced dims for
+    fast simulation-based verification (DFG structure identical)."""
+    if small:
+        g = dict(TI=6, TK=8, TJ=6)
+        c = dict(OH=5, OW=5, K=3)
+    else:
+        g = dict(TI=64, TK=16, TJ=64)
+        c = dict(OH=62, OW=62, K=3)
+    return {
+        "GEMM": build_gemm(**g, unroll=1, coalesced=False),
+        "GEMM-U": build_gemm(**g, unroll=4, coalesced=False),
+        "GEMM-U-C": build_gemm(**g, unroll=4, coalesced=True),
+        "CONV": build_conv(**c, variant="base"),
+        "CONV-U-C-1": build_conv(**c, variant="uc1"),
+        "CONV-U-C-2": build_conv(**c, variant="uc2"),
+    }

@@ -1,0 +1,80 @@
+"""Multi-bank data-layout generation (paper Fig. 3, piece 4, second half).
+
+Variables of the mapped loop kernel are allocated to the on-chip memory
+banks of the target CGRA.  Each array gets (bank, base) — bank-local word
+addressing — subject to bank capacity; the DFG builder folds ``base`` into
+the address arithmetic, and LOAD/STORE nodes are constrained by the mapper
+to PEs that can reach the assigned bank over the shared bus.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .adl import CGRAArch
+
+
+@dataclass(frozen=True)
+class ArrayDecl:
+    name: str
+    words: int
+    bank_pref: Optional[int] = None   # preferred bank (balance hint)
+
+
+@dataclass(frozen=True)
+class Placement:
+    name: str
+    words: int
+    bank: int
+    base: int   # word offset within the bank
+
+    @property
+    def bank_array(self) -> str:
+        return f"bank{self.bank}"
+
+
+@dataclass
+class DataLayout:
+    arch: CGRAArch
+    placements: Dict[str, Placement]
+
+    def bank_words(self, bank: int) -> int:
+        return self.arch.banks[bank].words
+
+    def bank_image_size(self) -> List[int]:
+        return [b.words for b in self.arch.banks]
+
+    def addr(self, name: str, flat_index: int) -> int:
+        p = self.placements[name]
+        assert 0 <= flat_index < p.words, (name, flat_index, p.words)
+        return p.base + flat_index
+
+
+def assign_layout(arch: CGRAArch, arrays: Sequence[ArrayDecl],
+                  banks: Optional[Sequence[int]] = None) -> DataLayout:
+    """Greedy capacity-aware allocation honouring bank preferences.
+
+    Arrays with an explicit ``bank_pref`` go there (error if they overflow);
+    the rest are placed largest-first onto the emptiest bank.
+    """
+    banks = list(banks if banks is not None else range(len(arch.banks)))
+    used = {b: 0 for b in banks}
+    placements: Dict[str, Placement] = {}
+
+    def place(a: ArrayDecl, b: int) -> None:
+        cap = arch.banks[b].words
+        if used[b] + a.words > cap:
+            raise ValueError(
+                f"array {a.name} ({a.words} words) overflows bank {b} "
+                f"({cap - used[b]} free)")
+        placements[a.name] = Placement(a.name, a.words, b, used[b])
+        used[b] += a.words
+
+    for a in arrays:
+        if a.bank_pref is not None:
+            place(a, a.bank_pref)
+    for a in sorted([a for a in arrays if a.bank_pref is None],
+                    key=lambda a: -a.words):
+        b = min(banks, key=lambda b: used[b])
+        place(a, b)
+    return DataLayout(arch, placements)

@@ -1,0 +1,95 @@
+"""Edge-deployment analyzer: the paper's technique as a first-class
+framework feature.
+
+For any assigned LM architecture, enumerate the distinct GEMM micro-kernel
+shapes its layers execute (q/k/v/o projections, FFN matmuls, expert FFNs,
+RWKV/Mamba projections), tile each one onto the Morpher CGRA model with the
+paper's output-stationary dataflow (section IV-A), run the *actual* mapper
+on the micro-kernel DFG, and report II / MII / utilization / estimated
+per-tile latency — Table-I methodology applied to the model zoo
+(`examples/edge_deploy.py --arch <id>`)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+from ..configs.registry import get_config
+from ..models.common import ModelConfig
+from .adl import cluster_4x4
+from .costmodel import F_CLK_HZ
+from .kernels_lib import build_gemm
+from .mapper import MapError, Mapping, map_kernel
+
+
+@dataclass
+class GemmSite:
+    name: str
+    M: int
+    K: int
+    N: int
+    count_per_layer: int = 1
+
+
+def model_gemm_sites(cfg: ModelConfig, tokens: int = 64) -> List[GemmSite]:
+    d, H, Hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    sites = [GemmSite("q_proj", tokens, d, H * hd)]
+    if cfg.mla:
+        sites += [GemmSite("q_lora", tokens, d, cfg.q_lora_rank),
+                  GemmSite("kv_lora", tokens, d,
+                           cfg.kv_lora_rank + cfg.qk_rope_dim)]
+    else:
+        sites += [GemmSite("kv_proj", tokens, d, Hkv * hd, 2)]
+    sites += [GemmSite("o_proj", tokens, H * hd, d)]
+    f = cfg.moe_d_ff if cfg.moe else cfg.d_ff
+    sites += [GemmSite("ffn_in", tokens, d, f, 2),
+              GemmSite("ffn_out", tokens, f, d)]
+    return sites
+
+
+@dataclass
+class OffloadReport:
+    site: str
+    tile: Tuple[int, int, int]
+    nodes: int
+    II: int
+    mii: int
+    utilization: float
+    est_tile_us: float
+
+
+def analyze_gemm_tile(TI: int = 16, TK: int = 8, TJ: int = 16,
+                      unroll: int = 4, arch=None) -> Tuple[Mapping, object]:
+    arch = arch or cluster_4x4()
+    spec = build_gemm(TI=TI, TK=TK, TJ=TJ, arch=arch,
+                      unroll=min(unroll, TK), coalesced=False)
+    mapping = map_kernel(spec.dfg, arch, spec.layout, ii_max=32)
+    return mapping, spec
+
+
+def analyze_arch_gemms(arch_id: str, tokens: int = 64,
+                       max_kernels: Optional[int] = None
+                       ) -> List[OffloadReport]:
+    cfg = get_config(arch_id)
+    sites = model_gemm_sites(cfg, tokens)
+    if max_kernels:
+        sites = sites[:max_kernels]
+    out: List[OffloadReport] = []
+    cache: Dict[Tuple[int, int, int], Tuple[Mapping, object]] = {}
+    for s in sites:
+        # the on-chip tile is bank-capacity bound, not site-size bound —
+        # one mapped tile is reused across the whole site (paper IV-A)
+        tile = (16, 8, 16)
+        if tile not in cache:
+            try:
+                cache[tile] = analyze_gemm_tile(*tile)
+            except MapError:
+                continue
+        mapping, spec = cache[tile]
+        iters = spec.mapped_iters
+        cyc = (iters - 1) * mapping.II + mapping.depth
+        invocations = tile[0] * tile[2]  # per-(i,j) invocations per tile
+        out.append(OffloadReport(
+            site=s.name, tile=tile, nodes=spec.dfg.n_nodes, II=mapping.II,
+            mii=mapping.mii, utilization=mapping.utilization,
+            est_tile_us=invocations * cyc / F_CLK_HZ * 1e6))
+    return out

@@ -1,0 +1,188 @@
+"""Cycle-accurate functional CGRA simulator in JAX (paper Fig. 3 piece 8).
+
+Morpher simulates the generated Verilog with Verilator; here the same
+contract is met by a jit-compiled `lax.scan` over cycles that executes the
+configuration bitstreams exactly as the RTL control memories would:
+
+  * every cycle, every PE reads its slot-(t mod II) configuration,
+  * operand muxes select from {4 inbound crossbar wires, register file,
+    own FU output register, immediate, live-in register},
+  * the FU executes (16-bit two's-complement datapath), LOADs have a
+    2-cycle latency through a pipeline register, STOREs commit at end of
+    cycle gated by the control module's iteration-validity window
+    (prologue/epilogue predication),
+  * crossbar output registers and RF writes update from the same
+    start-of-cycle snapshot (fully synchronous design).
+
+All PEs are vectorized; the cycle loop is a `lax.scan`; invocations (the
+host-driven outer loops) are a second `lax.scan` threading the memory
+image.  This is the component that makes verification fast enough to run
+in CI for every mapped kernel.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config_gen import (KIND_FUOUT, KIND_IMM, KIND_IN_E, KIND_IN_N,
+                         KIND_IN_S, KIND_IN_W, KIND_LIREG, KIND_NONE,
+                         KIND_REG, OPC, OPC_LOAD, OPC_NONE, OPC_PASS,
+                         OPC_STORE, SimConfig)
+from .dfg import Op
+
+# xo-port index a reader consults on its neighbour: OPP of (N,E,S,W)
+_OPP_IDX = np.array([2, 3, 0, 1], dtype=np.int32)
+
+
+def _wrap(x: jnp.ndarray, bits: int) -> jnp.ndarray:
+    half = 1 << (bits - 1)
+    full = 1 << bits
+    return ((x + half) & (full - 1)) - half
+
+
+def _alu(opc: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray, c: jnp.ndarray,
+         bits: int) -> jnp.ndarray:
+    sh = b & (bits - 1)
+    res = jnp.zeros_like(a)
+    res = jnp.where(opc == OPC_PASS, a, res)
+    res = jnp.where(opc == OPC[Op.ADD], a + b, res)
+    res = jnp.where(opc == OPC[Op.SUB], a - b, res)
+    res = jnp.where(opc == OPC[Op.MUL], a * b, res)
+    res = jnp.where(opc == OPC[Op.SHL], a << sh, res)
+    res = jnp.where(opc == OPC[Op.SHR], a >> sh, res)
+    res = jnp.where(opc == OPC[Op.AND], a & b, res)
+    res = jnp.where(opc == OPC[Op.OR], a | b, res)
+    res = jnp.where(opc == OPC[Op.XOR], a ^ b, res)
+    res = jnp.where(opc == OPC[Op.CMPGE], (a >= b).astype(a.dtype), res)
+    res = jnp.where(opc == OPC[Op.CMPEQ], (a == b).astype(a.dtype), res)
+    res = jnp.where(opc == OPC[Op.CMPLT], (a < b).astype(a.dtype), res)
+    res = jnp.where(opc == OPC[Op.SELECT], jnp.where(a != 0, b, c), res)
+    return _wrap(res, bits)
+
+
+def _as_jnp(cfg: SimConfig) -> Dict[str, jnp.ndarray]:
+    return {k: jnp.asarray(getattr(cfg, k)) for k in (
+        "op", "imm", "src_kind", "src_idx", "force_before", "force_val",
+        "xo_kind", "xo_idx", "rf_kind", "rf_idx", "mem_off", "mem_words",
+        "valid_start", "nbr_idx")}
+
+
+@functools.partial(jax.jit, static_argnames=("II", "P", "RF", "bits",
+                                             "n_iters", "n_cycles",
+                                             "scratch"))
+def _run_invocations(c: Dict[str, jnp.ndarray], mem0: jnp.ndarray,
+                     li_stack: jnp.ndarray, *, II: int, P: int, RF: int,
+                     bits: int, n_iters: int, n_cycles: int,
+                     scratch: int) -> jnp.ndarray:
+    opp = jnp.asarray(_OPP_IDX)
+    pe_ar = jnp.arange(P)
+
+    def one_invocation(mem: jnp.ndarray, li: jnp.ndarray) -> Tuple[jnp.ndarray, int]:
+        regs0 = jnp.zeros((P, RF), dtype=jnp.int32)
+        xo0 = jnp.zeros((P, 4), dtype=jnp.int32)
+        fu0 = jnp.zeros((P,), dtype=jnp.int32)
+        ldp0 = jnp.zeros((P,), dtype=jnp.int32)
+        fl0 = jnp.zeros((P,), dtype=bool)
+
+        def cycle(carry, t):
+            regs, xo, fu, ldp, fl, mem = carry
+            slot = t % II
+            opc = c["op"][slot]
+            # inbound wires: what my neighbour's opposite-facing port holds
+            inp = xo[c["nbr_idx"], opp[None, :]]          # [P,4]
+
+            def resolve(kind, idx):
+                v = jnp.zeros((P,), dtype=jnp.int32)
+                v = jnp.where(kind == KIND_IN_N, inp[:, 0], v)
+                v = jnp.where(kind == KIND_IN_E, inp[:, 1], v)
+                v = jnp.where(kind == KIND_IN_S, inp[:, 2], v)
+                v = jnp.where(kind == KIND_IN_W, inp[:, 3], v)
+                v = jnp.where(kind == KIND_REG,
+                              regs[pe_ar, jnp.clip(idx, 0, RF - 1)], v)
+                v = jnp.where(kind == KIND_FUOUT, fu, v)
+                v = jnp.where(kind == KIND_IMM, c["imm"][slot], v)
+                v = jnp.where(kind == KIND_LIREG,
+                              li[pe_ar, jnp.clip(idx, 0, li.shape[1] - 1)], v)
+                return v
+
+            def operand(port):
+                v = resolve(c["src_kind"][slot, :, port],
+                            c["src_idx"][slot, :, port])
+                fb = c["force_before"][slot, :, port]
+                return jnp.where(t < fb, c["force_val"][slot, :, port], v)
+
+            a, b, p3 = operand(0), operand(1), operand(2)
+            res = _alu(opc, a, b, p3, bits)
+
+            # memory
+            gaddr = c["mem_off"][slot] + jnp.clip(a, 0,
+                                                  c["mem_words"][slot] - 1)
+            loaded = jnp.take(mem, gaddr)
+            is_load = opc == OPC_LOAD
+            is_store = opc == OPC_STORE
+            vstart = c["valid_start"][slot]
+            gate = is_store & (t >= vstart) & (t < vstart + n_iters * II)
+            st_addr = jnp.where(gate, gaddr, scratch)
+            mem = mem.at[st_addr].set(jnp.where(gate, b, mem[scratch]))
+
+            fu_next = jnp.where(fl, ldp,
+                                jnp.where((opc != OPC_NONE) & ~is_load
+                                          & ~is_store, res, fu))
+            ldp_next = jnp.where(is_load, loaded, ldp)
+            fl_next = is_load
+
+            def write_bank(vals, kinds, idxs, old):
+                # vals written from the same start-of-cycle snapshot
+                new = resolve(kinds, idxs)
+                return jnp.where(kinds != KIND_NONE, new, old)
+
+            regs_next = jnp.stack(
+                [write_bank(None, c["rf_kind"][slot, :, r],
+                            c["rf_idx"][slot, :, r], regs[:, r])
+                 for r in range(RF)], axis=1)
+            xo_next = jnp.stack(
+                [write_bank(None, c["xo_kind"][slot, :, d],
+                            c["xo_idx"][slot, :, d], xo[:, d])
+                 for d in range(4)], axis=1)
+
+            return (regs_next, xo_next, fu_next, ldp_next, fl_next, mem), 0
+
+        carry = (regs0, xo0, fu0, ldp0, fl0, mem)
+        carry, _ = jax.lax.scan(cycle, carry, jnp.arange(n_cycles))
+        return carry[-1], 0
+
+    mem, _ = jax.lax.scan(one_invocation, mem0, li_stack)
+    return mem
+
+
+def simulate(cfg: SimConfig, banks: Dict[str, np.ndarray],
+             invocations, n_iters: int,
+             liveins_builder=None) -> Dict[str, np.ndarray]:
+    """Run the mapped kernel for every invocation and return final banks.
+
+    banks: {"bank<i>": int array} initial memory images.
+    invocations: list of {livein name: value} dicts (host outer loops).
+    """
+    n_banks = len(cfg.bank_offsets)
+    mem = np.zeros(cfg.total_words, dtype=np.int32)
+    for i in range(n_banks):
+        img = banks[f"bank{i}"]
+        mem[cfg.bank_offsets[i]:cfg.bank_offsets[i] + len(img)] = img
+
+    li_stack = np.stack([cfg.livein_array(inv) for inv in invocations])
+    out = _run_invocations(
+        _as_jnp(cfg), jnp.asarray(mem), jnp.asarray(li_stack),
+        II=cfg.II, P=cfg.P, RF=cfg.RF, bits=cfg.bits,
+        n_iters=n_iters, n_cycles=cfg.n_cycles(n_iters),
+        scratch=cfg.total_words - 1)
+    out = np.asarray(out)
+
+    result = {}
+    for i in range(n_banks):
+        w = len(banks[f"bank{i}"])
+        result[f"bank{i}"] = out[cfg.bank_offsets[i]:cfg.bank_offsets[i] + w]
+    return result

@@ -1,0 +1,27 @@
+"""Jitted wrapper for conv2d_os: pads Cout to the channel-block multiple."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..common import pad_to
+from .kernel import conv2d_os_pallas
+from .ref import conv2d_ref
+
+
+@functools.partial(jax.jit, static_argnames=("bco", "out_dtype", "interpret",
+                                             "use_kernel"))
+def conv2d_os(x: jnp.ndarray, w: jnp.ndarray, *, bco: int = 128,
+              out_dtype=None, interpret: bool = False,
+              use_kernel: bool = True) -> jnp.ndarray:
+    out_dtype = out_dtype or x.dtype
+    if not use_kernel:
+        return conv2d_ref(x, w, out_dtype)
+    Cout = w.shape[-1]
+    bco_ = min(bco, Cout) if Cout % min(bco, Cout) == 0 else bco
+    w_p, C0 = pad_to(w, 3, bco_)
+    out = conv2d_os_pallas(x, w_p, bco=bco_, out_dtype=out_dtype,
+                           interpret=interpret)
+    return out[..., :Cout]

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the output-stationary direct convolution."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def conv2d_ref(x: jnp.ndarray, w: jnp.ndarray,
+               out_dtype=None) -> jnp.ndarray:
+    """Valid NHWC direct conv.  x: (N,H,W,Cin), w: (KH,KW,Cin,Cout)."""
+    out_dtype = out_dtype or x.dtype
+    N, H, W, Cin = x.shape
+    KH, KW, _, Cout = w.shape
+    OH, OW = H - KH + 1, W - KW + 1
+    acc = jnp.zeros((N, OH, OW, Cout), jnp.float32)
+    for kh in range(KH):
+        for kw in range(KW):
+            patch = x[:, kh:kh + OH, kw:kw + OW, :].astype(jnp.float32)
+            acc = acc + jnp.einsum("nhwc,co->nhwo", patch,
+                                   w[kh, kw].astype(jnp.float32))
+    return acc.astype(out_dtype)

@@ -1,0 +1,31 @@
+"""Jitted wrapper for flash-decode attention."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..common import cdiv
+from .kernel import decode_attn_pallas
+from .ref import decode_attn_ref
+
+
+@functools.partial(jax.jit, static_argnames=("bs", "interpret", "use_kernel"))
+def decode_attn(q, k, v, lengths, *, bs: int = 512,
+                interpret: bool = False, use_kernel: bool = True):
+    """q: (B, H, D); k/v: (B, Hkv, S, D); lengths: (B,).  GQA decode."""
+    if not use_kernel:
+        return decode_attn_ref(q, k, v, lengths)
+    B, H, D = q.shape
+    _, Hkv, S, _ = k.shape
+    G = H // Hkv
+    bs_ = min(bs, S)
+    if S % bs_ != 0:
+        pad = cdiv(S, bs_) * bs_ - S
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    out = decode_attn_pallas(q.reshape(B, Hkv, G, D), k, v,
+                             lengths.astype(jnp.int32), bs=bs_,
+                             interpret=interpret)
+    return out.reshape(B, H, D)

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for single-token GQA decode attention."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def decode_attn_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    lengths: jnp.ndarray, scale=None) -> jnp.ndarray:
+    """q: (B, H, D); k/v: (B, Hkv, S, D); lengths: (B,) valid cache length.
+    Returns (B, H, D).  H must be a multiple of Hkv (GQA)."""
+    B, H, D = q.shape
+    _, Hkv, S, _ = k.shape
+    G = H // Hkv
+    scale = scale if scale is not None else 1.0 / (D ** 0.5)
+    qf = q.reshape(B, Hkv, G, D).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    logits = jnp.einsum("bhgd,bhsd->bhgs", qf, kf) * scale
+    mask = jnp.arange(S)[None, :] < lengths[:, None]       # (B, S)
+    logits = jnp.where(mask[:, None, None, :], logits, -1e30)
+    probs = jnp.exp(logits - logits.max(-1, keepdims=True))
+    probs = probs / probs.sum(-1, keepdims=True)
+    out = jnp.einsum("bhgs,bhsd->bhgd", probs, vf)
+    return out.reshape(B, H, D).astype(q.dtype)

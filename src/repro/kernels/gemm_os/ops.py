@@ -1,0 +1,43 @@
+"""Jitted public wrapper for the output-stationary GEMM kernel: handles
+padding to block multiples, dtype plumbing, and the interpret switch."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..common import cdiv, pad_to
+from .kernel import gemm_os_pallas
+from .ref import gemm_ref
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "activation",
+                                             "coalesce_grid", "out_dtype",
+                                             "interpret", "use_kernel"))
+def gemm_os(a: jnp.ndarray, b: jnp.ndarray,
+            bias: Optional[jnp.ndarray] = None, *,
+            bm: int = 128, bn: int = 128, bk: int = 128,
+            activation: Optional[str] = None,
+            coalesce_grid: bool = False,
+            out_dtype=None, interpret: bool = False,
+            use_kernel: bool = True) -> jnp.ndarray:
+    """act(A @ B + bias) with arbitrary M/N/K (zero-padded to blocks)."""
+    out_dtype = out_dtype or a.dtype
+    if not use_kernel:
+        return gemm_ref(a, b, bias, activation, out_dtype)
+    M, K = a.shape
+    _, N = b.shape
+    bm_ = min(bm, max(8, M))
+    a_p, M0 = pad_to(a, 0, bm_)
+    a_p, K0 = pad_to(a_p, 1, bk)
+    b_p, _ = pad_to(b, 0, bk)
+    b_p, N0 = pad_to(b_p, 1, bn)
+    bias_p = None
+    if bias is not None:
+        bias_p, _ = pad_to(bias, 0, bn)
+    out = gemm_os_pallas(a_p, b_p, bias_p, bm=bm_, bn=bn, bk=bk,
+                         activation=activation, coalesce_grid=coalesce_grid,
+                         out_dtype=out_dtype, interpret=interpret)
+    return out[:M, :N]

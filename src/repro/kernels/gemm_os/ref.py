@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the output-stationary GEMM kernel."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+
+def gemm_ref(a: jnp.ndarray, b: jnp.ndarray,
+             bias: Optional[jnp.ndarray] = None,
+             activation: Optional[str] = None,
+             out_dtype=None) -> jnp.ndarray:
+    out_dtype = out_dtype or a.dtype
+    acc = jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32),
+                  preferred_element_type=jnp.float32)
+    if bias is not None:
+        acc = acc + bias.astype(jnp.float32)[None, :]
+    if activation == "relu":
+        acc = jnp.maximum(acc, 0.0)
+    elif activation == "gelu":
+        acc = 0.5 * acc * (1.0 + jnp.tanh(
+            0.7978845608028654 * (acc + 0.044715 * acc ** 3)))
+    elif activation == "silu":
+        acc = acc * (1.0 / (1.0 + jnp.exp(-acc)))
+    elif activation is not None:
+        raise ValueError(activation)
+    return acc.astype(out_dtype)

@@ -1,0 +1,33 @@
+"""Jitted wrapper for the int8 quantized GEMM."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..common import pad_to
+from .kernel import qgemm_int8_pallas
+from .ref import qgemm_ref
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "out_dtype",
+                                             "interpret", "use_kernel"))
+def qgemm_int8(a, b, a_scale, b_scale, *, bm: int = 128, bn: int = 128,
+               bk: int = 256, out_dtype=jnp.float32,
+               interpret: bool = False, use_kernel: bool = True):
+    if not use_kernel:
+        return qgemm_ref(a, b, a_scale, b_scale, out_dtype)
+    M, K = a.shape
+    _, N = b.shape
+    bm_ = min(bm, max(8, M))
+    bk_ = min(bk, K) if K % min(bk, K) == 0 else bk
+    a_p, _ = pad_to(a, 0, bm_)
+    a_p, _ = pad_to(a_p, 1, bk_)
+    b_p, _ = pad_to(b, 0, bk_)
+    b_p, _ = pad_to(b_p, 1, bn)
+    sa_p, _ = pad_to(a_scale, 0, bm_)
+    sb_p, _ = pad_to(b_scale, 0, bn)
+    out = qgemm_int8_pallas(a_p, b_p, sa_p, sb_p, bm=bm_, bn=bn, bk=bk_,
+                            out_dtype=out_dtype, interpret=interpret)
+    return out[:M, :N]

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the int8 quantized GEMM (edge-inference datapath)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def qgemm_ref(a: jnp.ndarray, b: jnp.ndarray, a_scale: jnp.ndarray,
+              b_scale: jnp.ndarray, out_dtype=jnp.float32) -> jnp.ndarray:
+    """C = (a_scale[:,None] * b_scale[None,:]) * (int8 A @ int8 B).
+
+    a: (M,K) int8, b: (K,N) int8, a_scale: (M,) f32 per-row,
+    b_scale: (N,) f32 per-column."""
+    acc = jnp.dot(a.astype(jnp.int32), b.astype(jnp.int32),
+                  preferred_element_type=jnp.int32)
+    out = acc.astype(jnp.float32) * a_scale[:, None] * b_scale[None, :]
+    return out.astype(out_dtype)
+
+
+def quantize_rowwise(x: jnp.ndarray):
+    """Symmetric per-row int8 quantization: returns (q, scale)."""
+    amax = jnp.max(jnp.abs(x), axis=1)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0).astype(jnp.float32)
+    q = jnp.clip(jnp.round(x / scale[:, None]), -127, 127).astype(jnp.int8)
+    return q, scale

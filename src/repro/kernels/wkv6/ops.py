@@ -1,0 +1,34 @@
+"""Jitted wrapper for the WKV6 kernel: (B,T,H,D) layout plumbing."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import wkv6_pallas
+from .ref import wkv6_ref
+
+
+@functools.partial(jax.jit, static_argnames=("ct", "interpret", "use_kernel"))
+def wkv6(r, k, v, w, u, state0=None, *, ct: int = 64,
+         interpret: bool = False, use_kernel: bool = True):
+    """r/k/v/w: (B, T, H, D); u: (H, D).  Returns (out, state)."""
+    B, T, H, D = r.shape
+    if state0 is None:
+        state0 = jnp.zeros((B, H, D, D), jnp.float32)
+    if not use_kernel:
+        return wkv6_ref(r, k, v, w, u, state0)
+    ct_ = ct
+    while T % ct_ != 0:
+        ct_ //= 2
+    ct_ = max(1, ct_)
+
+    def to_bh(x):
+        return x.transpose(0, 2, 1, 3).reshape(B * H, T, D)
+
+    out, s = wkv6_pallas(to_bh(r), to_bh(k), to_bh(v), to_bh(w), u,
+                         state0.reshape(B * H, D, D), ct=ct_,
+                         interpret=interpret)
+    out = out.reshape(B, H, T, D).transpose(0, 2, 1, 3)
+    return out, s.reshape(B, H, D, D)

@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the RWKV6 (Finch) WKV recurrence with
+data-dependent decay.
+
+Per head (state S in R^{D x D}):
+    o_t = r_t @ (S_{t-1} + diag(u) (k_t^T v_t))
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t
+with w_t = exp(-exp(w_log_t)) data-dependent decay in (0,1).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_ref(r, k, v, w, u, state0=None):
+    """r/k/v/w: (B, T, H, D) fp32; u: (H, D).  Returns (out, final_state)
+    with out: (B, T, H, D), state: (B, H, D, D)."""
+    B, T, H, D = r.shape
+    if state0 is None:
+        state0 = jnp.zeros((B, H, D, D), jnp.float32)
+
+    def step(S, xs):
+        rt, kt, vt, wt = xs                       # each (B, H, D)
+        kv = kt[..., :, None] * vt[..., None, :]  # (B, H, D, D)
+        out = jnp.einsum("bhd,bhde->bhe", rt, S + u[None, :, :, None] * kv)
+        S = wt[..., :, None] * S + kv
+        return S, out
+
+    xs = tuple(jnp.moveaxis(x.astype(jnp.float32), 1, 0) for x in (r, k, v, w))
+    S, outs = jax.lax.scan(step, state0.astype(jnp.float32), xs)
+    return jnp.moveaxis(outs, 0, 1).astype(r.dtype), S

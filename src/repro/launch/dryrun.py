@@ -1,0 +1,186 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+# ^ MUST precede any other import: jax locks the device count on first init.
+
+"""Multi-pod dry-run: prove the distribution config is coherent without
+hardware.
+
+For every (architecture x input-shape) cell and each production mesh
+(single-pod 16x16, multi-pod 2x16x16), lower + compile the appropriate
+step function against ShapeDtypeStruct inputs and record:
+  * memory_analysis()  (bytes per device -> does it fit HBM),
+  * cost_analysis()    (FLOPs / bytes for the roofline),
+  * collective-bytes parsed from the compiled HLO.
+
+Usage:
+    python -m repro.launch.dryrun --arch llama3.2-1b --shape train_4k
+    python -m repro.launch.dryrun --all [--multi-pod] [--out results.json]
+"""
+import argparse
+import functools
+import json
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.registry import ARCH_IDS, SHAPES, get_config, runnable
+from ..models.zoo import build_model
+from ..roofline.hlo import collective_bytes, cost_terms
+from ..train import optimizer as optim
+from ..train.step import make_train_step
+from .mesh import make_production_mesh
+from .specs import (abstract_cache, abstract_params, abstract_train_state,
+                    decode_input_specs, token_or_embed_spec,
+                    train_batch_specs)
+
+
+def lower_cell(arch: str, shape: str, mesh, *, num_layers: Optional[int]
+               = None, microbatches: int = 1, extra: Optional[Dict] = None):
+    """Lower (not yet compile) one (arch, shape) cell on `mesh`.
+    num_layers overrides cfg.n_layers (used by the roofline two-point fit).
+    Returns (lowered, meta)."""
+    import dataclasses
+    cfg = get_config(arch)
+    if num_layers is not None:
+        # keep first_k_dense consistent when shrinking
+        cfg = dataclasses.replace(
+            cfg, n_layers=num_layers,
+            first_k_dense=min(cfg.first_k_dense, max(0, num_layers - 1)),
+            attn_every=min(cfg.attn_every, num_layers) if cfg.attn_every
+            else 0)
+    if extra and extra.get("scan_unroll"):
+        cfg = dataclasses.replace(cfg, scan_unroll=True)
+    if extra and extra.get("overrides"):
+        cfg = dataclasses.replace(cfg, **extra["overrides"])
+    cell = SHAPES[shape]
+    ok, why = runnable(cfg, cell)
+    if not ok:
+        raise SkipCell(why)
+    model = build_model(cfg)
+
+    with mesh:
+        if cell.kind == "train":
+            opt_cfg = optim.OptConfig()
+            logits_spec = None
+            if extra and extra.get("shard_logits"):
+                from jax.sharding import NamedSharding, PartitionSpec as P
+                dp = tuple(n for n in ("pod", "data")
+                           if n in mesh.axis_names)
+                logits_spec = NamedSharding(
+                    mesh, P(dp if len(dp) > 1 else dp[0], None, "model"))
+            mb = (extra or {}).get("microbatches", microbatches)
+            step = make_train_step(model, opt_cfg, num_microbatches=mb,
+                                   logits_spec=logits_spec)
+            state = abstract_train_state(model, mesh)
+            batch = train_batch_specs(cfg, cell, mesh)
+            lowered = jax.jit(step).lower(state, batch)
+        elif cell.kind == "prefill":
+            B, T = cell.global_batch, cell.seq_len
+            inputs = token_or_embed_spec(cfg, B, T, mesh)
+            lens = jax.ShapeDtypeStruct((B,), jnp.int32)
+            params, _ = abstract_params(model, mesh)
+            lowered = jax.jit(model.prefill).lower(params, inputs, lens)
+        else:  # decode
+            B, S = cell.global_batch, cell.seq_len
+            params, _ = abstract_params(model, mesh)
+            caches = abstract_cache(model, B, S, mesh)
+            toks, pos, lens = decode_input_specs(cfg, cell, mesh)
+            lowered = jax.jit(model.decode).lower(params, caches, toks,
+                                                  pos, lens)
+    return lowered, {"arch": arch, "shape": shape, "kind": cell.kind,
+                     "n_layers": cfg.n_layers if num_layers is None
+                     else num_layers}
+
+
+class SkipCell(Exception):
+    pass
+
+
+def run_cell(arch: str, shape: str, mesh, mesh_name: str,
+             compile_: bool = True) -> Dict[str, Any]:
+    t0 = time.time()
+    rec: Dict[str, Any] = {"arch": arch, "shape": shape, "mesh": mesh_name}
+    try:
+        lowered, meta = lower_cell(arch, shape, mesh)
+    except SkipCell as e:
+        rec.update(status="skip", reason=str(e))
+        return rec
+    rec["lower_s"] = round(time.time() - t0, 1)
+    if not compile_:
+        rec["status"] = "lowered"
+        return rec
+    t1 = time.time()
+    compiled = lowered.compile()
+    rec["compile_s"] = round(time.time() - t1, 1)
+    mem = compiled.memory_analysis()
+    rec["bytes_per_device"] = {
+        "argument": getattr(mem, "argument_size_in_bytes", None),
+        "output": getattr(mem, "output_size_in_bytes", None),
+        "temp": getattr(mem, "temp_size_in_bytes", None),
+        "peak": (getattr(mem, "argument_size_in_bytes", 0) or 0)
+        + (getattr(mem, "temp_size_in_bytes", 0) or 0),
+    }
+    rec["cost"] = cost_terms(compiled)
+    rec["collective_bytes"] = collective_bytes(compiled.as_text())
+    rec["status"] = "ok"
+    return rec
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    meshes = []
+    if args.both_meshes:
+        meshes = [("pod16x16", make_production_mesh(multi_pod=False)),
+                  ("pods2x16x16", make_production_mesh(multi_pod=True))]
+    else:
+        mp = args.multi_pod
+        meshes = [("pods2x16x16" if mp else "pod16x16",
+                   make_production_mesh(multi_pod=mp))]
+
+    cells = []
+    if args.all:
+        cells = [(a, s) for a in ARCH_IDS for s in SHAPES]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    results = []
+    fails = 0
+    for mesh_name, mesh in meshes:
+        for arch, shape in cells:
+            try:
+                rec = run_cell(arch, shape, mesh, mesh_name)
+            except Exception as e:  # noqa: BLE001 — report and continue
+                rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                       "status": "FAIL",
+                       "error": f"{type(e).__name__}: {e}"}
+                traceback.print_exc()
+                fails += 1
+            results.append(rec)
+            print(json.dumps(rec), flush=True)
+
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+    n_ok = sum(1 for r in results if r["status"] == "ok")
+    n_skip = sum(1 for r in results if r["status"] == "skip")
+    print(f"# dry-run: {n_ok} ok, {n_skip} skip, {fails} FAIL "
+          f"of {len(results)}", flush=True)
+    return 1 if fails else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

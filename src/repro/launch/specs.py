@@ -1,0 +1,83 @@
+"""ShapeDtypeStruct stand-ins for every model input: shardable, weak-type
+correct, zero device allocation.  The dry-run lowers against these.
+
+For [audio]/[vlm] archs the modality frontend is a stub: input_specs
+provides precomputed frame/patch embeddings (B, T, d_model)."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.registry import ShapeCell
+from ..dist.sharding import (batch_spec, cache_spec, params_shardings,
+                             tree_shardings)
+from ..models.common import ModelConfig
+from ..models.zoo import Model, build_model
+from ..train import optimizer as optim
+from ..train.step import TrainState, init_train_state
+
+
+def _sds(shape, dtype, mesh, spec) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def token_or_embed_spec(cfg: ModelConfig, B: int, T: int, mesh: Mesh):
+    if cfg.input_mode == "tokens":
+        return _sds((B, T), jnp.int32, mesh, batch_spec((B, T), mesh))
+    shape = (B, T, cfg.d_model)
+    return _sds(shape, cfg.dtype, mesh, batch_spec(shape, mesh))
+
+
+def train_batch_specs(cfg: ModelConfig, cell: ShapeCell, mesh: Mesh):
+    B, T = cell.global_batch, cell.seq_len
+    return {
+        "inputs": token_or_embed_spec(cfg, B, T, mesh),
+        "labels": _sds((B, T), jnp.int32, mesh, batch_spec((B, T), mesh)),
+    }
+
+
+def abstract_params(model: Model, mesh: Mesh):
+    shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    specs = params_shardings(shapes, mesh)
+    return jax.tree.map(
+        lambda s, p: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                          sharding=NamedSharding(mesh, p)),
+        shapes, specs), specs
+
+
+def abstract_train_state(model: Model, mesh: Mesh):
+    params, specs = abstract_params(model, mesh)
+    f32 = lambda t: jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, jnp.float32,
+                                       sharding=x.sharding), t)
+    opt = optim.OptState(
+        step=jax.ShapeDtypeStruct(
+            (), jnp.int32, sharding=NamedSharding(mesh, P())),
+        master=f32(params), m=f32(params), v=f32(params))
+    return TrainState(params=params, opt=opt)
+
+
+def abstract_cache(model: Model, B: int, S: int, mesh: Mesh):
+    shapes = jax.eval_shape(functools.partial(model.init_cache, B, S))
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(
+            x.shape, x.dtype,
+            sharding=NamedSharding(mesh, cache_spec(tuple(x.shape), mesh))),
+        shapes)
+
+
+def decode_input_specs(cfg: ModelConfig, cell: ShapeCell, mesh: Mesh):
+    B = cell.global_batch
+    if cfg.input_mode == "tokens":
+        toks = _sds((B, 1), jnp.int32, mesh, batch_spec((B, 1), mesh))
+    else:
+        toks = _sds((B, 1, cfg.d_model), cfg.dtype, mesh,
+                    batch_spec((B, 1, cfg.d_model), mesh))
+    pos = _sds((B, 1), jnp.int32, mesh, batch_spec((B, 1), mesh))
+    lens = _sds((B,), jnp.int32, mesh, batch_spec((B,), mesh))
+    return toks, pos, lens

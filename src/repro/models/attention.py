@@ -1,0 +1,155 @@
+"""Attention variants: GQA/MQA/MHA with RoPE, and DeepSeek-style MLA
+(latent-compressed KV).  Pure functions over param pytrees.
+
+Shapes: x (B, T, d); caches (B, Hkv, S, hd) (GQA) or latent (B, S, r+rope)
+(MLA).  Decode paths take `positions`/`lengths` for cache bookkeeping.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, apply_rope, causal_mask, init_dense, \
+    rope_angles
+
+NEG = -1e30
+
+
+# ------------------------------------------------------------------ GQA
+def init_gqa(key, cfg: ModelConfig) -> Dict:
+    d, H, Hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": init_dense(ks[0], (d, H * hd), dtype=cfg.dtype),
+        "wk": init_dense(ks[1], (d, Hkv * hd), dtype=cfg.dtype),
+        "wv": init_dense(ks[2], (d, Hkv * hd), dtype=cfg.dtype),
+        "wo": init_dense(ks[3], (H * hd, d), dtype=cfg.dtype),
+    }
+
+
+def _sdpa(q, k, v, mask):
+    """q: (B,T,H,hd); k/v: (B,S,Hkv,hd); mask: (T,S) or (B,T,S)."""
+    B, T, H, hd = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    qf = q.reshape(B, T, Hkv, G, hd).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    logits = jnp.einsum("bthgd,bshd->bhgts", qf, kf) / (hd ** 0.5)
+    if mask.ndim == 2:
+        mask = mask[None]
+    logits = jnp.where(mask[:, None, None], logits, NEG)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgts,bshd->bthgd", p, vf)
+    return out.reshape(B, T, H, hd).astype(q.dtype)
+
+
+def gqa_forward(p: Dict, cfg: ModelConfig, x, positions,
+                cache: Optional[Tuple] = None,
+                lengths: Optional[jnp.ndarray] = None):
+    """Training/prefill when cache is None (causal over x itself);
+    decode when cache=(k_cache, v_cache) — x is the new token(s), cache is
+    updated at `positions` and attended with `lengths` masking.
+    Returns (out, new_cache)."""
+    B, T, d = x.shape
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = jnp.einsum("btd,dk->btk", x, p["wq"]).reshape(B, T, H, hd)
+    k = jnp.einsum("btd,dk->btk", x, p["wk"]).reshape(B, T, Hkv, hd)
+    v = jnp.einsum("btd,dk->btk", x, p["wv"]).reshape(B, T, Hkv, hd)
+    cos, sin = rope_angles(positions, hd, cfg.rope_theta)   # (B,T,hd/2)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+
+    if cache is None:
+        mask = causal_mask(T, T)
+        out = _sdpa(q, k, v, mask)
+        new_cache = (k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3))
+    else:
+        kc, vc = cache                                   # (B, Hkv, S, hd)
+        S = kc.shape[2]
+        # scatter the new token(s) at `positions`
+        onehot = jax.nn.one_hot(positions, S, dtype=kc.dtype)  # (B,T,S)
+        kc = kc + jnp.einsum("bts,bthd->bhsd", onehot, k)
+        vc = vc + jnp.einsum("bts,bthd->bhsd", onehot, v)
+        span = jnp.arange(S)[None, :] < lengths[:, None]       # (B,S)
+        # attend directly in the cache layout: no (B,S,H,hd) transposes —
+        # the sequence axis stays sharded end-to-end and GSPMD lowers the
+        # softmax/weighted-sum contractions to small all-reduces instead
+        # of all-gathering the cache (the decode collective hillclimb).
+        G = H // Hkv
+        qf = q.reshape(B, T, Hkv, G, hd).astype(jnp.float32)
+        logits = jnp.einsum("bthgd,bhsd->bhgts", qf,
+                            kc.astype(jnp.float32)) / (hd ** 0.5)
+        logits = jnp.where(span[:, None, None, None, :], logits, NEG)
+        pattn = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum("bhgts,bhsd->bthgd", pattn,
+                         vc.astype(jnp.float32)).astype(x.dtype)
+        out = out.reshape(B, T, H, hd)
+        new_cache = (kc, vc)
+    out = out.reshape(B, T, H * hd)
+    return jnp.einsum("btk,kd->btd", out, p["wo"]), new_cache
+
+
+# ------------------------------------------------------------------ MLA
+def init_mla(key, cfg: ModelConfig) -> Dict:
+    d, H = cfg.d_model, cfg.n_heads
+    rq, rkv = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "wq_a": init_dense(ks[0], (d, rq), dtype=cfg.dtype),
+        "wq_b": init_dense(ks[1], (rq, H * (dn + dr)), dtype=cfg.dtype),
+        "wkv_a": init_dense(ks[2], (d, rkv + dr), dtype=cfg.dtype),
+        "wkv_b": init_dense(ks[3], (rkv, H * (dn + dv)), dtype=cfg.dtype),
+        "wo": init_dense(ks[4], (H * dv, d), dtype=cfg.dtype),
+    }
+
+
+def mla_forward(p: Dict, cfg: ModelConfig, x, positions,
+                cache: Optional[jnp.ndarray] = None,
+                lengths: Optional[jnp.ndarray] = None):
+    """MLA with latent-KV caching: the cache stores (c_kv, k_rope) —
+    (B, S, rkv + dr) — the memory win of DeepSeek-V3.  Returns
+    (out, new_cache)."""
+    B, T, d = x.shape
+    H = cfg.n_heads
+    rkv, dn, dr, dv = (cfg.kv_lora_rank, cfg.qk_nope_dim, cfg.qk_rope_dim,
+                       cfg.v_head_dim)
+    q = jnp.einsum("btd,dr->btr", x, p["wq_a"])
+    q = jnp.einsum("btr,rk->btk", q, p["wq_b"]).reshape(B, T, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    cos, sin = rope_angles(positions, dr, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+
+    ckv = jnp.einsum("btd,dr->btr", x, p["wkv_a"])        # (B,T,rkv+dr)
+    c_lat, k_rope = ckv[..., :rkv], ckv[..., rkv:]
+    k_rope = apply_rope(k_rope[:, :, None, :], cos, sin)[:, :, 0, :]
+    lat = jnp.concatenate([c_lat, k_rope], axis=-1)       # (B,T,rkv+dr)
+
+    if cache is None:
+        full = lat
+        S = T
+        mask = causal_mask(T, S)[None]
+    else:
+        S = cache.shape[1]
+        onehot = jax.nn.one_hot(positions, S, dtype=cache.dtype)
+        full = cache + jnp.einsum("bts,btr->bsr", onehot, lat)
+        mask = (jnp.arange(S)[None, :] < lengths[:, None])[:, None, :]
+    c_all, kr_all = full[..., :rkv], full[..., rkv:]
+
+    # up-project latents to per-head keys/values
+    kv = jnp.einsum("bsr,rk->bsk", c_all,
+                    p["wkv_b"]).reshape(B, S, H, dn + dv)
+    k_nope, v = kv[..., :dn], kv[..., dn:]
+    qf = q_nope.astype(jnp.float32)
+    logits = (jnp.einsum("bthd,bshd->bhts", qf, k_nope.astype(jnp.float32))
+              + jnp.einsum("bthd,bsd->bhts", q_rope.astype(jnp.float32),
+                           kr_all.astype(jnp.float32))) / ((dn + dr) ** 0.5)
+    logits = jnp.where(mask[:, None] if mask.ndim == 3 else mask,
+                       logits, NEG)
+    pattn = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhts,bshd->bthd", pattn, v.astype(jnp.float32))
+    out = out.reshape(B, T, H * dv).astype(x.dtype)
+    return jnp.einsum("btk,kd->btd", out, p["wo"]), full

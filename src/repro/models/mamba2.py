@@ -1,0 +1,106 @@
+"""Mamba2 (SSD) block + the Zamba2 hybrid wiring (Mamba2 backbone with a
+shared attention block applied periodically).
+
+SSD recurrence per head h with scalar decay a_t:
+    S_t = a_t * S_{t-1} + dt_t * (x_t outer B_t)     S: (head_p, d_state)
+    y_t = S_t @ C_t + D * x_t
+a_t = exp(-softplus(dt_raw + bias) * exp(A_log)) — input-dependent.
+
+O(1) state per layer -> 500k decode runnable (hybrid family).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, init_dense, rms_norm
+
+
+def mamba_dims(cfg: ModelConfig):
+    d_inner = 2 * cfg.d_model
+    nh = cfg.n_heads
+    hp = d_inner // nh
+    ds = cfg.ssm_state
+    return d_inner, nh, hp, ds
+
+
+def init_mamba2_block(key, cfg: ModelConfig) -> Dict:
+    d = cfg.d_model
+    d_inner, nh, hp, ds = mamba_dims(cfg)
+    K = cfg.conv_kernel
+    conv_dim = d_inner + 2 * ds
+    ks = jax.random.split(key, 6)
+    return {
+        "ln": jnp.ones((d,), jnp.float32),
+        "in_proj": init_dense(ks[0], (d, 2 * d_inner + 2 * ds + nh),
+                              dtype=cfg.dtype),
+        "conv_w": init_dense(ks[1], (K, conv_dim), scale=0.5,
+                             dtype=cfg.dtype),
+        "conv_b": jnp.zeros((conv_dim,), cfg.dtype),
+        "A_log": jnp.zeros((nh,), jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "out_proj": init_dense(ks[2], (d_inner, d), dtype=cfg.dtype),
+    }
+
+
+def _causal_conv(x, w, b, prev):
+    """x: (B,T,C) depthwise causal conv, kernel K.  prev: (B,K-1,C) left
+    context (zeros at sequence start).  Returns (y, new_prev)."""
+    K = w.shape[0]
+    xp = jnp.concatenate([prev, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i][None, None] for i in range(K))
+    new_prev = xp[:, -(K - 1):] if K > 1 else prev
+    return y + b[None, None], new_prev
+
+
+def mamba2_block(p: Dict, cfg: ModelConfig, x,
+                 state: Optional[Tuple] = None):
+    """x: (B,T,d); state=(conv_prev (B,K-1,C), ssm (B,nh,hp,ds)) or None.
+    Returns (out, new_state)."""
+    B, T, d = x.shape
+    d_inner, nh, hp, ds = mamba_dims(cfg)
+    K = cfg.conv_kernel
+    conv_dim = d_inner + 2 * ds
+    if state is None:
+        conv_prev = jnp.zeros((B, K - 1, conv_dim), x.dtype)
+        S0 = jnp.zeros((B, nh, hp, ds), jnp.float32)
+    else:
+        conv_prev, S0 = state
+
+    xn = rms_norm(x, p["ln"], cfg.rms_eps)
+    zxbcdt = jnp.einsum("btd,de->bte", xn, p["in_proj"])
+    z = zxbcdt[..., :d_inner]
+    xbc = zxbcdt[..., d_inner:d_inner + conv_dim]
+    dt_raw = zxbcdt[..., d_inner + conv_dim:]              # (B,T,nh)
+
+    xbc, conv_prev = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_prev)
+    xbc = jax.nn.silu(xbc.astype(jnp.float32))
+    xs = xbc[..., :d_inner].reshape(B, T, nh, hp)
+    Bm = xbc[..., d_inner:d_inner + ds]                    # (B,T,ds)
+    Cm = xbc[..., d_inner + ds:]                           # (B,T,ds)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"][None, None])       # (B,T,nh)
+    a = jnp.exp(-dt * jnp.exp(p["A_log"])[None, None])     # (B,T,nh)
+
+    def step(S, inp):
+        xt, Bt, Ct, at, dtt = inp    # (B,nh,hp) (B,ds) (B,ds) (B,nh) (B,nh)
+        dBx = jnp.einsum("bnp,bs,bn->bnps", xt, Bt, dtt)
+        S = at[..., None, None] * S + dBx
+        y = jnp.einsum("bnps,bs->bnp", S, Ct)
+        return S, y
+
+    xs_t = jnp.moveaxis(xs, 1, 0)
+    S, ys = jax.lax.scan(step, S0,
+                         (xs_t, jnp.moveaxis(Bm, 1, 0),
+                          jnp.moveaxis(Cm, 1, 0), jnp.moveaxis(a, 1, 0),
+                          jnp.moveaxis(dt, 1, 0)))
+    y = jnp.moveaxis(ys, 0, 1)                             # (B,T,nh,hp)
+    y = y + p["D"][None, None, :, None] * xs
+    y = y.reshape(B, T, d_inner)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = jnp.einsum("bte,ed->btd", y.astype(x.dtype), p["out_proj"])
+    return x + out, (conv_prev.astype(x.dtype), S)

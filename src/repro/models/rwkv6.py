@@ -1,0 +1,115 @@
+"""RWKV6 "Finch" block: time-mix with data-dependent decay (the WKV6
+recurrence) + channel-mix.  Attention-free; O(1) state per layer makes the
+500k-token decode shape runnable (DESIGN.md section 5).
+
+The recurrence math matches kernels/wkv6/ref.py exactly; training uses a
+chunk-sequential lax.scan (vectorized over batch x heads), decode carries
+(B, H, D, D) state.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, init_dense, rms_norm
+
+
+def init_rwkv6_block(key, cfg: ModelConfig) -> Dict:
+    d, f = cfg.d_model, cfg.d_ff
+    H = cfg.n_heads
+    D = d // H
+    ks = jax.random.split(key, 10)
+    lora = max(32, d // 32)
+    return {
+        "ln1": jnp.ones((d,), jnp.float32),
+        "ln2": jnp.ones((d,), jnp.float32),
+        "mix_r": 0.5 * jnp.ones((d,), cfg.dtype),
+        "mix_k": 0.5 * jnp.ones((d,), cfg.dtype),
+        "mix_v": 0.5 * jnp.ones((d,), cfg.dtype),
+        "mix_w": 0.5 * jnp.ones((d,), cfg.dtype),
+        "wr": init_dense(ks[0], (d, d), dtype=cfg.dtype),
+        "wk": init_dense(ks[1], (d, d), dtype=cfg.dtype),
+        "wv": init_dense(ks[2], (d, d), dtype=cfg.dtype),
+        "wo": init_dense(ks[3], (d, d), dtype=cfg.dtype),
+        # data-dependent decay LoRA (the Finch contribution)
+        "w_a": init_dense(ks[4], (d, lora), scale=0.02, dtype=cfg.dtype),
+        "w_b": init_dense(ks[5], (lora, d), scale=0.02, dtype=cfg.dtype),
+        "w_base": -6.0 * jnp.ones((d,), jnp.float32),
+        "u": init_dense(ks[6], (H, D), scale=0.5),
+        "ck": init_dense(ks[7], (d, f), dtype=cfg.dtype),
+        "cv": init_dense(ks[8], (f, d), dtype=cfg.dtype),
+        "mix_c": 0.5 * jnp.ones((d,), cfg.dtype),
+    }
+
+
+def _token_shift(x, prev):
+    """prev: (B,1,d) last token of the previous segment (zeros at start)."""
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def _wkv6_scan(r, k, v, w, u, state0):
+    """r/k/v/w: (B,T,H,D); u: (H,D); state0: (B,H,D,D)."""
+    def step(S, xs):
+        rt, kt, vt, wt = xs
+        kv = kt[..., :, None] * vt[..., None, :]
+        out = jnp.einsum("bhd,bhde->bhe", rt, S + u[None, :, :, None] * kv)
+        S = wt[..., :, None] * S + kv
+        return S, out
+
+    xs = tuple(jnp.moveaxis(a.astype(jnp.float32), 1, 0)
+               for a in (r, k, v, w))
+    S, outs = jax.lax.scan(step, state0.astype(jnp.float32), xs)
+    return jnp.moveaxis(outs, 0, 1), S
+
+
+def rwkv6_block(p: Dict, cfg: ModelConfig, x,
+                state: Optional[Tuple] = None):
+    """x: (B,T,d).  state = (last_token (B,1,d), wkv_state (B,H,D,D),
+    last_token_cm (B,1,d)) for decode; None for training (zeros).
+    Returns (out, new_state)."""
+    B, T, d = x.shape
+    H = cfg.n_heads
+    D = d // H
+    if state is None:
+        last = jnp.zeros((B, 1, d), x.dtype)
+        S0 = jnp.zeros((B, H, D, D), jnp.float32)
+        last_cm = jnp.zeros((B, 1, d), x.dtype)
+    else:
+        last, S0, last_cm = state
+
+    # ---- time mix (WKV6)
+    xn = rms_norm(x, p["ln1"], cfg.rms_eps)
+    prev = _token_shift(xn, last)
+
+    def mix(m):
+        return xn + (prev - xn) * m
+
+    r = jnp.einsum("btd,de->bte", mix(p["mix_r"]), p["wr"])
+    k = jnp.einsum("btd,de->bte", mix(p["mix_k"]), p["wk"])
+    v = jnp.einsum("btd,de->bte", mix(p["mix_v"]), p["wv"])
+    wl = jnp.einsum("btd,dr->btr", mix(p["mix_w"]), p["w_a"])
+    wl = jnp.einsum("btr,rd->btd", jnp.tanh(wl.astype(jnp.float32)).astype(
+        x.dtype), p["w_b"])
+    decay = jnp.exp(-jnp.exp(p["w_base"][None, None]
+                             + wl.astype(jnp.float32)))     # (B,T,d) in (0,1)
+
+    def heads(a):
+        return a.reshape(B, T, H, D)
+
+    out, S = _wkv6_scan(heads(r), heads(k), heads(v),
+                        heads(decay.astype(x.dtype)), p["u"], S0)
+    out = out.reshape(B, T, d).astype(x.dtype)
+    x = x + jnp.einsum("btd,de->bte", out, p["wo"])
+
+    # ---- channel mix
+    xn2 = rms_norm(x, p["ln2"], cfg.rms_eps)
+    prev2 = _token_shift(xn2, last_cm)
+    xc = xn2 + (prev2 - xn2) * p["mix_c"]
+    h = jnp.einsum("btd,df->btf", xc, p["ck"])
+    h = jnp.square(jax.nn.relu(h.astype(jnp.float32))).astype(x.dtype)
+    x = x + jnp.einsum("btf,fd->btd", h, p["cv"])
+
+    new_state = (xn[:, -1:], S, xn2[:, -1:])
+    return x, new_state

@@ -1,0 +1,172 @@
+"""Generic decoder-only transformer with scanned layers.
+
+Supports every assigned LM-family arch via ModelConfig switches:
+  * GQA/MQA/MHA attention (llama3.2, granite, codeqwen, musicgen, llava)
+  * MLA attention (deepseek-v3)
+  * dense SwiGLU FFN or MoE FFN (llama4-maverick, deepseek-v3), with
+    first_k_dense dense layers before the MoE stack
+  * token or embedding inputs (audio/vlm backbone stubs)
+  * optional MTP auxiliary head (deepseek-v3)
+
+Layers are stacked (leading axis L) and executed with `lax.scan` so the
+HLO stays one-layer-sized: compile time at 512 devices remains tractable
+and the roofline analysis scales per-layer costs analytically (L=1 vs L=2
+two-point fit, see roofline/analysis.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .attention import gqa_forward, init_gqa, init_mla, mla_forward
+from .common import ModelConfig, init_dense, rms_norm, swiglu
+from .moe import init_moe, moe_forward
+
+
+# ------------------------------------------------------------- one block
+def init_block(key, cfg: ModelConfig, moe: bool) -> Dict:
+    ks = jax.random.split(key, 3)
+    d = cfg.d_model
+    p: Dict[str, Any] = {
+        "ln1": jnp.ones((d,), jnp.float32),
+        "ln2": jnp.ones((d,), jnp.float32),
+        "attn": init_mla(ks[0], cfg) if cfg.mla else init_gqa(ks[0], cfg),
+    }
+    if moe:
+        p["ffn"] = init_moe(ks[1], cfg)
+    else:
+        f = cfg.dense_d_ff if (cfg.moe and cfg.first_k_dense) else cfg.d_ff
+        k1, k2, k3 = jax.random.split(ks[1], 3)
+        p["ffn"] = {
+            "wi_gate": init_dense(k1, (d, f), dtype=cfg.dtype),
+            "wi_up": init_dense(k2, (d, f), dtype=cfg.dtype),
+            "wo": init_dense(k3, (f, d), dtype=cfg.dtype),
+        }
+    return p
+
+
+def block_forward(p: Dict, cfg: ModelConfig, x, positions, cache, lengths,
+                  moe: bool):
+    """Returns (x, new_cache, aux)."""
+    h = rms_norm(x, p["ln1"], cfg.rms_eps)
+    if cfg.mla:
+        attn_out, new_cache = mla_forward(p["attn"], cfg, h, positions,
+                                          cache, lengths)
+    else:
+        attn_out, new_cache = gqa_forward(p["attn"], cfg, h, positions,
+                                          cache, lengths)
+    x = x + attn_out
+    h = rms_norm(x, p["ln2"], cfg.rms_eps)
+    if moe:
+        f, aux = moe_forward(p["ffn"], cfg, h)
+    else:
+        f = swiglu(h, p["ffn"]["wi_gate"], p["ffn"]["wi_up"],
+                   p["ffn"]["wo"])
+        aux = jnp.zeros((), jnp.float32)
+    return x + f, new_cache, aux
+
+
+# ------------------------------------------------------------- full model
+def init_transformer(key, cfg: ModelConfig) -> Dict:
+    ks = jax.random.split(key, 6)
+    d = cfg.d_model
+    n_moe = cfg.n_layers - cfg.first_k_dense if cfg.moe else 0
+    n_dense = cfg.first_k_dense if cfg.moe else cfg.n_layers
+    p: Dict[str, Any] = {
+        "embed": init_dense(ks[0], (cfg.vocab, d), scale=0.02,
+                            dtype=cfg.dtype),
+        "ln_f": jnp.ones((d,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        p["head"] = init_dense(ks[1], (d, cfg.vocab), dtype=cfg.dtype)
+    if n_dense:
+        p["dense_layers"] = jax.vmap(
+            lambda k: init_block(k, cfg, moe=False))(
+                jax.random.split(ks[2], n_dense))
+    if n_moe:
+        p["moe_layers"] = jax.vmap(
+            lambda k: init_block(k, cfg, moe=True))(
+                jax.random.split(ks[3], n_moe))
+    if cfg.mtp:
+        kp, kb = jax.random.split(ks[4])
+        p["mtp"] = {"proj": init_dense(kp, (2 * d, d), dtype=cfg.dtype),
+                    "block": init_block(kb, cfg, moe=False)}
+    return p
+
+
+def _scan_layers(stacked: Dict, cfg: ModelConfig, x, positions, caches,
+                 lengths, moe: bool, remat: bool, want_cache: bool):
+    """Scan a stacked-layer group.  caches: stacked per-layer cache pytree
+    (or None).  Returns (x, new_caches, aux_sum)."""
+
+    def body(carry, layer):
+        xx = carry
+        params, cache = layer
+        f = block_forward
+        if remat:
+            f = jax.checkpoint(block_forward, static_argnums=(1, 6),
+                               policy=jax.checkpoint_policies.dots_saveable)
+        xx, new_cache, aux = f(params, cfg, xx, positions, cache, lengths,
+                               moe)
+        if not want_cache:
+            new_cache = None   # training: don't materialize stacked KV
+        return xx, (new_cache, aux)
+
+    x, (new_caches, auxs) = jax.lax.scan(body, x, (stacked, caches),
+                                         unroll=True if cfg.scan_unroll
+                                         else 1)
+    return x, new_caches, jnp.sum(auxs)
+
+
+def transformer_apply(params: Dict, cfg: ModelConfig, tokens_or_embeds,
+                      positions, caches: Optional[Dict] = None,
+                      lengths: Optional[jnp.ndarray] = None,
+                      remat: bool = False, want_cache: bool = False):
+    """Core forward.  caches=None: causal self-attention over the inputs
+    (training: want_cache=False / prefill: want_cache=True); caches given:
+    decode.  Returns (hidden, new_caches, aux)."""
+    if cfg.input_mode == "tokens":
+        x = params["embed"][tokens_or_embeds]
+    else:
+        x = tokens_or_embeds.astype(cfg.dtype)
+
+    want_cache = want_cache or caches is not None
+    aux_total = jnp.zeros((), jnp.float32)
+    new_caches: Dict[str, Any] = {}
+    if "dense_layers" in params:
+        c = caches.get("dense") if caches else None
+        x, nc, aux = _scan_layers(params["dense_layers"], cfg, x, positions,
+                                  c, lengths, moe=False, remat=remat,
+                                  want_cache=want_cache)
+        new_caches["dense"] = nc
+        aux_total += aux
+    if "moe_layers" in params:
+        c = caches.get("moe") if caches else None
+        x, nc, aux = _scan_layers(params["moe_layers"], cfg, x, positions,
+                                  c, lengths, moe=True, remat=remat,
+                                  want_cache=want_cache)
+        new_caches["moe"] = nc
+        aux_total += aux
+    x = rms_norm(x, params["ln_f"], cfg.rms_eps)
+    return x, new_caches, aux_total
+
+
+def logits_from_hidden(params: Dict, cfg: ModelConfig, x):
+    if cfg.tie_embeddings:
+        return jnp.einsum("btd,vd->btv", x, params["embed"])
+    return jnp.einsum("btd,dv->btv", x, params["head"])
+
+
+def mtp_logits(params: Dict, cfg: ModelConfig, hidden, tokens):
+    """DeepSeek MTP: predict token t+2 from [h_t ; emb(token_{t+1})]."""
+    emb_next = params["embed"][tokens[:, 1:]]              # (B,T-1,d)
+    h = jnp.concatenate([hidden[:, :-1], emb_next], axis=-1)
+    h = jnp.einsum("btd,dk->btk", h.astype(cfg.dtype), params["mtp"]["proj"])
+    B, Tm1, _ = h.shape
+    pos = jnp.arange(Tm1)[None].repeat(B, 0)
+    out, _cache, _aux = block_forward(params["mtp"]["block"], cfg,
+                                      h, pos, None, None, moe=False)
+    return logits_from_hidden(params, cfg, out)

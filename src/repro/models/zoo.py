@@ -1,0 +1,266 @@
+"""Unified model API over all assigned architecture families.
+
+    model = build_model(cfg)
+    params = model.init(rng)
+    logits, aux = model.train_logits(params, tokens_or_embeds)
+    logits, caches = model.prefill(params, inputs, lengths)
+    logits, caches = model.decode(params, caches, inputs, positions, lengths)
+    caches = model.init_cache(batch, max_len)
+
+Families:
+  dense/moe/audio/vlm -> transformer.py (GQA or MLA, dense or MoE FFN)
+  ssm                 -> RWKV6 stack (rwkv6.py)
+  hybrid              -> Zamba2: scanned Mamba2 layers with a *shared*
+                         attention block applied every cfg.attn_every
+                         layers (per-slot KV cache).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, init_dense, rms_norm
+from .mamba2 import init_mamba2_block, mamba2_block, mamba_dims
+from .rwkv6 import init_rwkv6_block, rwkv6_block
+from .transformer import (block_forward, init_block, init_transformer,
+                          logits_from_hidden, mtp_logits, transformer_apply)
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable
+    train_logits: Callable          # (params, inputs) -> (logits, aux)
+    prefill: Callable               # (params, inputs, lengths) -> (logits, caches)
+    decode: Callable                # (params, caches, inputs, positions, lengths)
+    init_cache: Callable            # (batch, max_len) -> caches
+    mtp_logits: Optional[Callable] = None
+
+
+# ---------------------------------------------------------- transformer
+def _build_transformer(cfg: ModelConfig) -> Model:
+    def init(rng):
+        return init_transformer(rng, cfg)
+
+    def train_logits(params, inputs, remat: bool = True):
+        B = inputs.shape[0]
+        T = inputs.shape[1]
+        pos = jnp.arange(T)[None].repeat(B, 0)
+        h, _caches, aux = transformer_apply(params, cfg, inputs, pos,
+                                            remat=remat)
+        return logits_from_hidden(params, cfg, h), aux
+
+    def prefill(params, inputs, lengths):
+        B, T = inputs.shape[0], inputs.shape[1]
+        pos = jnp.arange(T)[None].repeat(B, 0)
+        h, caches, _aux = transformer_apply(params, cfg, inputs, pos,
+                                            want_cache=True)
+        return logits_from_hidden(params, cfg, h[:, -1:]), caches
+
+    def decode(params, caches, inputs, positions, lengths):
+        h, caches, _aux = transformer_apply(params, cfg, inputs, positions,
+                                            caches=caches, lengths=lengths)
+        return logits_from_hidden(params, cfg, h), caches
+
+    def init_cache(batch: int, max_len: int):
+        caches: Dict[str, Any] = {}
+        n_moe = cfg.n_layers - cfg.first_k_dense if cfg.moe else 0
+        n_dense = cfg.first_k_dense if cfg.moe else cfg.n_layers
+        def one(n):
+            if cfg.mla:
+                return jnp.zeros(
+                    (n, batch, max_len, cfg.kv_lora_rank + cfg.qk_rope_dim),
+                    cfg.dtype)
+            return (jnp.zeros((n, batch, cfg.n_kv_heads, max_len, cfg.hd),
+                              cfg.dtype),
+                    jnp.zeros((n, batch, cfg.n_kv_heads, max_len, cfg.hd),
+                              cfg.dtype))
+        if n_dense:
+            caches["dense"] = one(n_dense)
+        if n_moe:
+            caches["moe"] = one(n_moe)
+        return caches
+
+    mtp = None
+    if cfg.mtp:
+        def mtp(params, hidden, tokens):  # noqa: F811
+            return mtp_logits(params, cfg, hidden, tokens)
+
+    return Model(cfg, init, train_logits, prefill, decode, init_cache,
+                 mtp_logits=mtp)
+
+
+# ----------------------------------------------------------------- rwkv6
+def _build_rwkv(cfg: ModelConfig) -> Model:
+    H = cfg.n_heads
+    D = cfg.d_model // H
+
+    def init(rng):
+        ks = jax.random.split(rng, 3)
+        return {
+            "embed": init_dense(ks[0], (cfg.vocab, cfg.d_model), scale=0.02,
+                                dtype=cfg.dtype),
+            "ln_f": jnp.ones((cfg.d_model,), jnp.float32),
+            "head": init_dense(ks[1], (cfg.d_model, cfg.vocab),
+                               dtype=cfg.dtype),
+            "layers": jax.vmap(lambda k: init_rwkv6_block(k, cfg))(
+                jax.random.split(ks[2], cfg.n_layers)),
+        }
+
+    def _apply(params, x, states):
+        def body(xx, layer):
+            p, st = layer
+            xx, new_st = rwkv6_block(p, cfg, xx, st)
+            return xx, new_st
+        x, new_states = jax.lax.scan(body, x, (params["layers"], states),
+                             unroll=True if cfg.scan_unroll else 1)
+        x = rms_norm(x, params["ln_f"], cfg.rms_eps)
+        return x, new_states
+
+    def _zero_state(batch: int):
+        L = cfg.n_layers
+        return (jnp.zeros((L, batch, 1, cfg.d_model), cfg.dtype),
+                jnp.zeros((L, batch, H, D, D), jnp.float32),
+                jnp.zeros((L, batch, 1, cfg.d_model), cfg.dtype))
+
+    def train_logits(params, inputs, remat: bool = True):
+        x = params["embed"][inputs]
+        h, _ = _apply(params, x, _zero_state(inputs.shape[0]))
+        return jnp.einsum("btd,dv->btv", h, params["head"]), \
+            jnp.zeros((), jnp.float32)
+
+    def prefill(params, inputs, lengths):
+        x = params["embed"][inputs]
+        h, states = _apply(params, x, _zero_state(inputs.shape[0]))
+        return jnp.einsum("btd,dv->btv", h[:, -1:], params["head"]), states
+
+    def decode(params, states, inputs, positions, lengths):
+        x = params["embed"][inputs]
+        h, states = _apply(params, x, states)
+        return jnp.einsum("btd,dv->btv", h, params["head"]), states
+
+    def init_cache(batch: int, max_len: int):
+        return _zero_state(batch)   # O(1) state: max_len-independent
+
+    return Model(cfg, init, train_logits, prefill, decode, init_cache)
+
+
+# ---------------------------------------------------------------- zamba2
+def _build_zamba(cfg: ModelConfig) -> Model:
+    every = cfg.attn_every
+    n_apps = cfg.n_layers // every
+
+    def init(rng):
+        ks = jax.random.split(rng, 4)
+        return {
+            "embed": init_dense(ks[0], (cfg.vocab, cfg.d_model), scale=0.02,
+                                dtype=cfg.dtype),
+            "ln_f": jnp.ones((cfg.d_model,), jnp.float32),
+            "head": init_dense(ks[1], (cfg.d_model, cfg.vocab),
+                               dtype=cfg.dtype),
+            "layers": jax.vmap(lambda k: init_mamba2_block(k, cfg))(
+                jax.random.split(ks[2], cfg.n_layers)),
+            # the Zamba2 signature: ONE shared transformer block
+            "shared": init_block(ks[3], cfg, moe=False),
+        }
+
+    def _apply(params, x, m_states, a_caches, positions, lengths,
+               mode: str):
+        """m_states: stacked mamba states; a_caches: stacked (n_apps) KV for
+        the shared block's applications.  mode: train | prefill | decode."""
+        idxs = jnp.arange(cfg.n_layers)
+
+        def body(carry, layer):
+            xx, acaches = carry
+            p, mst, i = layer
+            xx, new_mst = mamba2_block(p, cfg, xx, mst)
+
+            def with_attn(args):
+                xx, acaches = args
+                slot = i // every
+                if mode == "train":
+                    out, _c, _a = block_forward(params["shared"], cfg, xx,
+                                                positions, None, None,
+                                                moe=False)
+                    return out, acaches
+                if mode == "prefill":
+                    # causal self-attention; capture the slot's KV cache
+                    out, new_c, _a = block_forward(params["shared"], cfg,
+                                                   xx, positions, None,
+                                                   None, moe=False)
+                else:  # decode: attend into the slot's cache
+                    cache = jax.tree.map(lambda c: c[slot], acaches)
+                    out, new_c, _a = block_forward(params["shared"], cfg,
+                                                   xx, positions, cache,
+                                                   lengths, moe=False)
+                acaches = jax.tree.map(
+                    lambda c, n: jax.lax.dynamic_update_index_in_dim(
+                        c, n, slot, 0), acaches, new_c)
+                return out, acaches
+
+            apply_attn = (i + 1) % every == 0
+            xx, acaches = jax.lax.cond(apply_attn, with_attn,
+                                       lambda a: a, (xx, acaches))
+            return (xx, acaches), new_mst
+
+        (x, a_caches), new_m = jax.lax.scan(
+            body, (x, a_caches), (params["layers"], m_states, idxs),
+            unroll=True if cfg.scan_unroll else 1)
+        x = rms_norm(x, params["ln_f"], cfg.rms_eps)
+        return x, new_m, a_caches
+
+    def _zero_mstate(batch: int):
+        d_inner, nh, hp, ds = mamba_dims(cfg)
+        K = cfg.conv_kernel
+        conv_dim = d_inner + 2 * ds
+        L = cfg.n_layers
+        return (jnp.zeros((L, batch, K - 1, conv_dim), cfg.dtype),
+                jnp.zeros((L, batch, nh, hp, ds), jnp.float32))
+
+    def _zero_acache(batch: int, max_len: int):
+        return (jnp.zeros((n_apps, batch, cfg.n_kv_heads, max_len, cfg.hd),
+                          cfg.dtype),
+                jnp.zeros((n_apps, batch, cfg.n_kv_heads, max_len, cfg.hd),
+                          cfg.dtype))
+
+    def train_logits(params, inputs, remat: bool = True):
+        B, T = inputs.shape
+        x = params["embed"][inputs]
+        pos = jnp.arange(T)[None].repeat(B, 0)
+        h, _m, _a = _apply(params, x, _zero_mstate(B), None, pos, None,
+                           "train")
+        return jnp.einsum("btd,dv->btv", h, params["head"]), \
+            jnp.zeros((), jnp.float32)
+
+    def prefill(params, inputs, lengths):
+        B, T = inputs.shape
+        x = params["embed"][inputs]
+        pos = jnp.arange(T)[None].repeat(B, 0)
+        acache = _zero_acache(B, T)
+        h, m, a = _apply(params, x, _zero_mstate(B), acache, pos, lengths,
+                         "prefill")
+        return jnp.einsum("btd,dv->btv", h[:, -1:], params["head"]), (m, a)
+
+    def decode(params, caches, inputs, positions, lengths):
+        m_states, a_caches = caches
+        x = params["embed"][inputs]
+        h, m, a = _apply(params, x, m_states, a_caches, positions, lengths,
+                         "decode")
+        return jnp.einsum("btd,dv->btv", h, params["head"]), (m, a)
+
+    def init_cache(batch: int, max_len: int):
+        return (_zero_mstate(batch), _zero_acache(batch, max_len))
+
+    return Model(cfg, init, train_logits, prefill, decode, init_cache)
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    if cfg.family == "ssm":
+        return _build_rwkv(cfg)
+    if cfg.family == "hybrid":
+        return _build_zamba(cfg)
+    return _build_transformer(cfg)

@@ -1,0 +1,118 @@
+"""Roofline analysis from compiled dry-run artifacts (no hardware).
+
+Per (arch x shape) cell on the single-pod mesh, derive the three terms:
+
+    compute    = HLO_FLOPs / (chips * 197e12 bf16 FLOP/s)
+    memory     = HLO_bytes / (chips * 819e9 B/s HBM)
+    collective = collective_bytes / (chips * 50e9 B/s ICI)
+
+cost_analysis counts a lax.scan body once, so totals are reconstructed
+with a two-point *unrolled* fit: compile the model at n_layers=1 and
+n_layers=2 with the layer scan unrolled — the difference is exactly one
+layer's cost under the production shardings; total = base + L * layer.
+(Approximations: zamba2's shared-attention cadence and deepseek's 3 dense
+layers are folded into the layer term — noted in EXPERIMENTS.md.)
+
+MODEL_FLOPS = 6 * N_active * tokens (train) / 2 * N_active * tokens
+(inference); the ratio MODEL_FLOPS / HLO_FLOPs exposes remat/redundancy.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Dict, Optional
+
+import jax
+
+from ..configs.registry import SHAPES, get_config, runnable
+from .hlo import collective_bytes, cost_terms
+
+# TPU v5e per chip
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+CHIPS = 256
+
+
+def _cell_costs(arch: str, shape: str, mesh, n_layers: int,
+                unroll: bool) -> Dict[str, float]:
+    """Lower+compile at a reduced layer count; return per-device terms."""
+    from ..launch.dryrun import lower_cell  # late import (XLA_FLAGS order)
+    import repro.launch.dryrun as dr
+
+    cfg = get_config(arch)
+    extra: Dict[str, Any] = {"scan_unroll": unroll}
+    if cfg.moe and cfg.first_k_dense:
+        # the layer term must measure the *MoE* layer (58/61 of deepseek):
+        # force an all-MoE stack for both fit points
+        extra["overrides"] = {"first_k_dense": 0}
+    lowered, _meta = lower_cell(arch, shape, mesh, num_layers=n_layers,
+                                extra=extra)
+    compiled = lowered.compile()
+    c = cost_terms(compiled)
+    coll = collective_bytes(compiled.as_text())
+    return {"flops": c["flops"], "bytes": c["bytes_accessed"],
+            "coll": float(coll["total"])}
+
+
+def analyze_cell(arch: str, shape: str, mesh,
+                 full_record: Optional[Dict] = None) -> Dict[str, Any]:
+    """Roofline terms for one cell (single-pod).  full_record: the
+    40-cell dry-run JSON record (for memory_analysis / sanity)."""
+    cfg = get_config(arch)
+    cell = SHAPES[shape]
+    ok, why = runnable(cfg, cell)
+    if not ok:
+        return {"arch": arch, "shape": shape, "status": "skip",
+                "reason": why}
+
+    one = _cell_costs(arch, shape, mesh, 1, True)
+    two = _cell_costs(arch, shape, mesh, 2, True)
+    layer = {k: max(0.0, two[k] - one[k]) for k in one}
+    base = {k: max(0.0, one[k] - layer[k]) for k in one}
+    L = cfg.n_layers
+    total = {k: base[k] + L * layer[k] for k in one}
+
+    # roofline terms (seconds, per device — cost_analysis is per-module,
+    # i.e. per-device in SPMD)
+    t_compute = total["flops"] / PEAK_FLOPS
+    t_memory = total["bytes"] / HBM_BW
+    t_coll = total["coll"] / ICI_BW
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    dominant = max(terms, key=terms.get)
+
+    # useful-model flops
+    tokens = cell.global_batch * (cell.seq_len if cell.kind != "decode"
+                                  else 1)
+    mult = 6 if cell.kind == "train" else 2
+    model_flops = mult * cfg.params_active * tokens / CHIPS  # per device
+    hlo_flops = total["flops"]
+    ratio = model_flops / hlo_flops if hlo_flops else float("nan")
+    bound = max(terms.values())
+    # fraction of roofline: useful work / (dominant-term time * peak)
+    roofline_frac = (model_flops / PEAK_FLOPS) / bound if bound else 0.0
+
+    return {
+        "arch": arch, "shape": shape, "status": "ok",
+        "kind": cell.kind, "n_layers": L,
+        "per_device": total,
+        **{k: round(v, 6) for k, v in terms.items()},
+        "dominant": dominant.replace("_s", ""),
+        "model_flops_per_device": model_flops,
+        "model_vs_hlo_flops": round(ratio, 4),
+        "roofline_fraction": round(roofline_frac, 4),
+        "memory_analysis": (full_record or {}).get("bytes_per_device"),
+    }
+
+
+SUGGESTIONS = {
+    "compute": "raise MXU occupancy: larger per-device batch/microbatch, "
+               "fuse small ops, drop remat on cheap layers",
+    "memory": "cut HBM traffic: bf16 cache/activations, fuse elementwise "
+              "chains, output-stationary blocking (gemm_os), "
+              "better remat policy",
+    "collective": "reshard: move collectives off the critical path, "
+                  "overlap via async collectives, reduce TP degree or "
+                  "switch reduce-scatter/all-gather placement",
+}

@@ -1,0 +1,64 @@
+"""HLO introspection: cost_analysis terms + collective-byte accounting.
+
+collective_bytes parses the compiled HLO text and sums operand sizes of
+every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute op (cost_analysis does not report collectives).
+
+NOTE scan bodies appear once in the HLO; the roofline two-point layer fit
+(analysis.py) handles trip-count scaling.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*"
+    r"((?:\([^)]*\))|(?:\w+\[[\d,]*\](?:\{[^}]*\})?))\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute"
+    r"|all-gather-start|all-reduce-start|collective-permute-start)\b",
+    re.MULTILINE)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Output-shape bytes summed per collective kind (per device)."""
+    out: Dict[str, int] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        shape_str, kind = m.group(1), m.group(2)
+        kind = kind.replace("-start", "")
+        out[kind] = out.get(kind, 0) + _shape_bytes(shape_str)
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return out
+
+
+def cost_terms(compiled) -> Dict[str, float]:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0] if ca else {}
+    get = ca.get if hasattr(ca, "get") else lambda k, d=0: d
+    return {
+        "flops": float(get("flops", 0.0) or 0.0),
+        "bytes_accessed": float(get("bytes accessed", 0.0) or 0.0),
+        "transcendentals": float(get("transcendentals", 0.0) or 0.0),
+    }

@@ -1,0 +1,94 @@
+"""Batched serving engine: continuous-batching style decode loop.
+
+Slots hold independent requests; each engine step decodes one token for
+every active slot (the decode_32k dry-run shape is exactly one engine
+step at full batch).  Prefill admits new requests into free slots.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.zoo import Model
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray
+    max_new: int
+    out: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+class Engine:
+    def __init__(self, model: Model, params: Any, batch: int, max_len: int):
+        self.model = model
+        self.params = params
+        self.batch = batch
+        self.max_len = max_len
+        self.caches = model.init_cache(batch, max_len)
+        self.lengths = np.zeros((batch,), np.int32)
+        self.last_tok = np.zeros((batch,), np.int32)
+        self.slots: List[Optional[Request]] = [None] * batch
+        self._decode = jax.jit(model.decode)
+
+    def admit(self, req: Request) -> bool:
+        for i, s in enumerate(self.slots):
+            if s is None:
+                self.slots[i] = req
+                # prefill this slot (batch-1 prefill; production would batch)
+                toks = jnp.asarray(req.prompt[None, :])
+                logits, caches = self.model.prefill(
+                    self.params, toks, jnp.asarray([len(req.prompt)]))
+                self._merge_cache(i, caches, len(req.prompt))
+                self.lengths[i] = len(req.prompt)
+                self.last_tok[i] = int(jnp.argmax(logits[0, -1]))
+                return True
+        return False
+
+    def _merge_cache(self, slot: int, caches: Any, plen: int) -> None:
+        def merge(full, new):
+            if full.ndim == new.ndim and new.shape[1] == 1:
+                # seq axis position varies per cache family; write via lax
+                pad = [(0, 0)] * new.ndim
+                idx = [slice(None)] * new.ndim
+                idx[1] = slice(slot, slot + 1)
+                seq_axis = None
+                for ax in range(2, new.ndim):
+                    if new.shape[ax] not in (full.shape[ax],):
+                        seq_axis = ax
+                        break
+                if seq_axis is not None:
+                    idx[seq_axis] = slice(0, new.shape[seq_axis])
+                return full.at[tuple(idx)].set(new)
+            return full
+        self.caches = jax.tree.map(merge, self.caches, caches)
+
+    def step(self) -> Dict[int, int]:
+        """One decode step for all active slots; returns {rid: token}."""
+        active = [i for i, s in enumerate(self.slots) if s is not None]
+        if not active:
+            return {}
+        toks = jnp.asarray(self.last_tok[:, None])
+        pos = jnp.asarray(self.lengths[:, None])
+        lens = jnp.asarray(self.lengths + 1)
+        logits, self.caches = self._decode(self.params, self.caches, toks,
+                                           pos, lens)
+        nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+        out: Dict[int, int] = {}
+        for i in active:
+            req = self.slots[i]
+            tok = int(nxt[i])
+            req.out.append(tok)
+            out[req.rid] = tok
+            self.lengths[i] += 1
+            self.last_tok[i] = tok
+            if len(req.out) >= req.max_new or self.lengths[i] >= self.max_len:
+                req.done = True
+                self.slots[i] = None
+        return out

@@ -1,0 +1,86 @@
+"""AdamW with fp32 master weights/moments, global-norm clipping and a
+warmup+cosine schedule.  Optimizer state shards exactly like the params
+(ZeRO-style: params are already FSDP-sharded, so moments/master follow)."""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_frac: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    master: Any     # fp32 copy of params
+    m: Any
+    v: Any
+
+
+def schedule(cfg: OptConfig, step: jnp.ndarray) -> jnp.ndarray:
+    warm = cfg.lr * (step + 1) / max(1, cfg.warmup_steps)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(1, cfg.total_steps - cfg.warmup_steps), 0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (
+        1 + jnp.cos(jnp.pi * prog))
+    return jnp.minimum(warm, cfg.lr * cos)
+
+
+def init(params: Any) -> OptState:
+    f32 = lambda t: jax.tree.map(lambda x: x.astype(jnp.float32), t)
+    zeros = lambda t: jax.tree.map(
+        lambda x: jnp.zeros(x.shape, jnp.float32), t)
+    return OptState(step=jnp.zeros((), jnp.int32), master=f32(params),
+                    m=zeros(params), v=zeros(params))
+
+
+def apply(cfg: OptConfig, grads: Any, state: OptState, params: Any
+          ) -> Tuple[Any, OptState, Dict[str, jnp.ndarray]]:
+    # global-norm clip (the all-reduce here is part of the collective term)
+    gsq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+              for g in jax.tree.leaves(grads))
+    gnorm = jnp.sqrt(gsq)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+    lr = schedule(cfg, state.step)
+    b1, b2 = cfg.b1, cfg.b2
+    t = state.step + 1
+    bc1 = 1 - b1 ** t.astype(jnp.float32)
+    bc2 = 1 - b2 ** t.astype(jnp.float32)
+
+    def upd(g, m, v, w):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        step_ = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps)
+        w = w - lr * (step_ + cfg.weight_decay * w)
+        return m, v, w
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_m = tdef.flatten_up_to(state.m)
+    flat_v = tdef.flatten_up_to(state.v)
+    flat_w = tdef.flatten_up_to(state.master)
+    new_m, new_v, new_w = [], [], []
+    for g, m, v, w in zip(flat_g, flat_m, flat_v, flat_w):
+        m2, v2, w2 = upd(g, m, v, w)
+        new_m.append(m2)
+        new_v.append(v2)
+        new_w.append(w2)
+    master = tdef.unflatten(new_w)
+    new_params = jax.tree.map(lambda w, p: w.astype(p.dtype), master, params)
+    new_state = OptState(step=t, master=master, m=tdef.unflatten(new_m),
+                         v=tdef.unflatten(new_v))
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,138 @@
+"""Per-kernel interpret-mode allclose sweeps against the ref.py oracles,
+plus hypothesis property tests on the GEMM wrapper."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.gemm_os.ops import gemm_os
+from repro.kernels.gemm_os.ref import gemm_ref
+from repro.kernels.conv2d_os.ops import conv2d_os
+from repro.kernels.conv2d_os.ref import conv2d_ref
+from repro.kernels.qgemm_int8.ops import qgemm_int8
+from repro.kernels.qgemm_int8.ref import qgemm_ref, quantize_rowwise
+from repro.kernels.decode_attn.ops import decode_attn
+from repro.kernels.decode_attn.ref import decode_attn_ref
+from repro.kernels.wkv6.ops import wkv6
+from repro.kernels.wkv6.ref import wkv6_ref
+
+RNG = np.random.default_rng(0)
+
+
+def _rand(shape, dtype=jnp.float32, scale=1.0):
+    return jnp.asarray(RNG.normal(size=shape) * scale, dtype)
+
+
+@pytest.mark.parametrize("M,K,N", [(128, 128, 128), (256, 384, 128),
+                                   (64, 200, 96), (8, 128, 257)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("coalesce", [False, True])
+def test_gemm_os_shapes(M, K, N, dtype, coalesce):
+    a, b = _rand((M, K), dtype), _rand((K, N), dtype)
+    got = gemm_os(a, b, interpret=True, coalesce_grid=coalesce)
+    want = gemm_ref(a, b)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol * 8)
+
+
+@pytest.mark.parametrize("act", [None, "relu", "gelu", "silu"])
+def test_gemm_os_fused_epilogue(act):
+    a, b = _rand((64, 128)), _rand((128, 64))
+    bias = _rand((64,))
+    got = gemm_os(a, b, bias, activation=act, interpret=True)
+    want = gemm_ref(a, b, bias, act)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 100), st.integers(1, 100), st.integers(1, 100))
+def test_gemm_os_property_any_shape(M, K, N):
+    a = jnp.asarray(np.arange(M * K).reshape(M, K) % 7, jnp.float32)
+    b = jnp.asarray(np.arange(K * N).reshape(K, N) % 5, jnp.float32)
+    got = gemm_os(a, b, interpret=True, bm=32, bn=32, bk=32)
+    want = gemm_ref(a, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("N,H,W,Cin,Cout,K", [(1, 12, 12, 8, 16, 3),
+                                              (2, 9, 9, 4, 32, 3),
+                                              (1, 8, 8, 8, 8, 1)])
+def test_conv2d_os(N, H, W, Cin, Cout, K):
+    x = _rand((N, H, W, Cin))
+    w = _rand((K, K, Cin, Cout), scale=0.5)
+    got = conv2d_os(x, w, interpret=True)
+    want = conv2d_ref(x, w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("M,K,N", [(64, 128, 64), (100, 96, 56)])
+def test_qgemm_int8(M, K, N):
+    af, bf = _rand((M, K)), _rand((K, N))
+    a, sa = quantize_rowwise(af)
+    bq, sb = quantize_rowwise(bf.T)
+    got = qgemm_int8(a, bq.T, sa, sb, interpret=True)
+    want = qgemm_ref(a, bq.T, sa, sb)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_qgemm_int8_exact_vs_int_math():
+    # int path must be bit-exact before scaling
+    a = jnp.asarray(RNG.integers(-127, 127, (32, 64)), jnp.int8)
+    b = jnp.asarray(RNG.integers(-127, 127, (64, 48)), jnp.int8)
+    ones = jnp.ones((32,), jnp.float32)
+    got = qgemm_int8(a, b, ones, jnp.ones((48,), jnp.float32),
+                     interpret=True)
+    want = a.astype(jnp.int32) @ b.astype(jnp.int32)
+    np.testing.assert_array_equal(np.asarray(got, np.int64),
+                                  np.asarray(want, np.int64))
+
+
+@pytest.mark.parametrize("B,H,Hkv,S,D,bs", [(2, 8, 2, 256, 64, 64),
+                                            (1, 4, 4, 128, 32, 128),
+                                            (3, 6, 1, 192, 64, 64)])
+def test_decode_attn(B, H, Hkv, S, D, bs):
+    q = _rand((B, H, D))
+    k = _rand((B, Hkv, S, D))
+    v = _rand((B, Hkv, S, D))
+    lens = jnp.asarray(RNG.integers(1, S + 1, (B,)), jnp.int32)
+    got = decode_attn(q, k, v, lens, bs=bs, interpret=True)
+    want = decode_attn_ref(q, k, v, lens)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("B,T,H,D,ct", [(2, 32, 3, 16, 8), (1, 16, 2, 8, 16),
+                                        (2, 24, 1, 32, 4)])
+def test_wkv6(B, T, H, D, ct):
+    r = _rand((B, T, H, D), scale=0.5)
+    k = _rand((B, T, H, D), scale=0.5)
+    v = _rand((B, T, H, D))
+    w = jnp.asarray(RNG.uniform(0.5, 0.99, (B, T, H, D)), jnp.float32)
+    u = _rand((H, D), scale=0.3)
+    got, gs = wkv6(r, k, v, w, u, ct=ct, interpret=True)
+    want, ws = wkv6_ref(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(gs), np.asarray(ws),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_wkv6_state_chaining():
+    # running two halves with carried state == running whole
+    B, T, H, D = 1, 16, 2, 8
+    r, k, v = (_rand((B, T, H, D), scale=0.5) for _ in range(3))
+    w = jnp.asarray(RNG.uniform(0.6, 0.99, (B, T, H, D)), jnp.float32)
+    u = _rand((H, D), scale=0.3)
+    full, _ = wkv6(r, k, v, w, u, ct=4, interpret=True)
+    h1, s1 = wkv6(r[:, :8], k[:, :8], v[:, :8], w[:, :8], u, ct=4,
+                  interpret=True)
+    h2, _ = wkv6(r[:, 8:], k[:, 8:], v[:, 8:], w[:, 8:], u, state0=s1,
+                 ct=4, interpret=True)
+    np.testing.assert_allclose(np.asarray(full[:, 8:]), np.asarray(h2),
+                               rtol=1e-5, atol=1e-5)

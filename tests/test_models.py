@@ -1,0 +1,101 @@
+"""Per-arch smoke tests (reduced configs): one forward/train step on CPU
+asserting output shapes + no NaNs, plus decode-vs-full-forward consistency
+for each family (the KV-cache / recurrent-state correctness check)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import ARCH_IDS, SHAPES, get_config, runnable
+from repro.models.zoo import build_model
+
+RNG = jax.random.PRNGKey(0)
+
+
+def _inputs(cfg, B, T):
+    if cfg.input_mode == "tokens":
+        return jax.random.randint(RNG, (B, T), 0, cfg.vocab)
+    return jax.random.normal(RNG, (B, T, cfg.d_model), jnp.float32)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_train_step(arch):
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(RNG)
+    B, T = 2, 16
+    logits, aux = model.train_logits(params, _inputs(cfg, B, T))
+    assert logits.shape == (B, T, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-1b", "deepseek-v3-671b",
+                                  "rwkv6-1.6b", "zamba2-1.2b"])
+def test_decode_matches_full_forward(arch):
+    """prefill T0 tokens then decode one-by-one == full causal forward.
+
+    MoE archs use a no-drop capacity factor here: capacity-based routing
+    drops tokens under contention in the batched pass but never in
+    single-token decode, so exact consistency only holds drop-free (a real
+    property of capacity MoE, documented in DESIGN.md)."""
+    import dataclasses
+    cfg = get_config(arch).reduced()
+    if cfg.moe:
+        cfg = dataclasses.replace(cfg, moe_capacity_factor=8.0)
+    model = build_model(cfg)
+    params = model.init(RNG)
+    B, T = 1, 8
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, T), 0, cfg.vocab)
+
+    full_logits, _ = model.train_logits(params, toks)
+
+    T0 = 5
+    # prefill-length caches -> padded decode caches (rwkv state is
+    # length-independent; zamba's shared-attn KV and transformer KV pad)
+    _lg, pcaches = model.prefill(params, toks[:, :T0], jnp.asarray([T0]))
+    if cfg.family == "ssm":
+        caches = pcaches
+    else:
+        caches = model.init_cache(B, T)
+
+        def merge(c, pc):
+            if c.ndim != pc.ndim:
+                return c
+            sl = tuple(slice(0, s) for s in pc.shape)
+            return c.at[sl].set(pc)
+
+        caches = jax.tree.map(merge, caches, pcaches)
+
+    for t in range(T0, T):
+        pos = jnp.asarray([[t]])
+        lens = jnp.asarray([t + 1])
+        logits, caches = model.decode(params, caches, toks[:, t:t + 1],
+                                      pos, lens)
+        np.testing.assert_allclose(
+            np.asarray(logits[0, 0], np.float32),
+            np.asarray(full_logits[0, t], np.float32),
+            rtol=3e-2, atol=3e-2)
+
+
+def test_runnable_matrix():
+    skips = []
+    for a in ARCH_IDS:
+        cfg = get_config(a)
+        for s, cell in SHAPES.items():
+            ok, why = runnable(cfg, cell)
+            if not ok:
+                skips.append((a, s))
+    # exactly the 8 full-attention archs skip long_500k
+    assert len(skips) == 8
+    assert all(s == "long_500k" for _a, s in skips)
+    assert not any(a in ("rwkv6-1.6b", "zamba2-1.2b") for a, _s in skips)
+
+
+def test_param_count_formulas():
+    # analytic 6ND inputs must roughly match realized reduced params scaling
+    cfg = get_config("deepseek-v3-671b")
+    assert 600e9 < cfg.params_dense < 750e9         # ~671B
+    assert 25e9 < cfg.params_active < 60e9          # ~37B active
+    dense = get_config("llama3.2-1b")
+    assert 1.0e9 < dense.params_dense < 1.6e9
