@@ -1,16 +1,20 @@
 """Benchmark harness entry point: one function per paper table/figure.
 
-  table1        -- the paper's Table I (II/MII/util/time/speedup, 6 kernels)
-  mapper_sweep  -- II vs MII across cluster variants (the architecture-
-                   exploration use-case of the ADL)
-  kernel_micro  -- Pallas kernels: us/call in interpret mode (correctness
-                   harness timing; real perf comes from the roofline)
-  sim_throughput-- JAX simulator cycles/s (the Verilator-replacement claim)
+  table1          -- the paper's Table I (II/MII/util/time/speedup, 6 kernels)
+  mapper_sweep    -- II vs MII across cluster variants (the architecture-
+                     exploration use-case of the ADL)
+  kernel_micro    -- Pallas kernels: us/call in interpret mode (correctness
+                     harness timing; real perf comes from the roofline)
+  sim_throughput  -- JAX simulator cycles/s (the Verilator-replacement claim)
+  toolchain_cache -- cold vs warm Toolchain.compile over the Table-I kernel
+                     set (the content-addressed artifact cache)
 
 Prints ``name,us_per_call,derived`` CSV rows per benchmark.
 """
 from __future__ import annotations
 
+import shutil
+import tempfile
 import time
 
 import numpy as np
@@ -24,19 +28,22 @@ def bench_table1() -> None:
 def bench_mapper_sweep() -> None:
     from repro.core.adl import cluster_4x4
     from repro.core.kernels_lib import build_gemm
-    from repro.core.mapper import MapError, map_kernel
+    from repro.core.mapper import MapError, MapperOptions
+    from repro.core.toolchain import Toolchain
 
+    # use_cache=False: this benchmark measures real mapper search time
+    tc = Toolchain(options=MapperOptions(ii_max=24, seeds=(0, 1, 2, 3),
+                                         time_budget_s=60))
     for rf in (4, 8, 16):
         for unroll in (1, 2, 4):
             arch = cluster_4x4(regfile=rf)
             spec = build_gemm(TI=6, TK=8, TJ=6, unroll=unroll, arch=arch)
             t0 = time.time()
             try:
-                m = map_kernel(spec.dfg, arch, spec.layout, ii_max=24,
-                               seeds=range(4), time_budget_s=60)
+                ck = tc.compile(spec, use_cache=False)
                 print(f"mapper_rf{rf}_u{unroll},"
                       f"{(time.time()-t0)*1e6:.0f},"
-                      f"II={m.II};MII={m.mii};util={m.utilization:.3f}")
+                      f"II={ck.II};MII={ck.mii};util={ck.utilization:.3f}")
             except MapError:
                 print(f"mapper_rf{rf}_u{unroll},"
                       f"{(time.time()-t0)*1e6:.0f},unmapped")
@@ -69,23 +76,49 @@ def bench_kernel_micro() -> None:
 
 
 def bench_sim_throughput() -> None:
-    from repro.core.config_gen import generate_config
     from repro.core.kernels_lib import build_gemm
-    from repro.core.mapper import map_kernel
-    from repro.core.simulator import simulate
+    from repro.core.toolchain import Toolchain
     from repro.core.verify import generate_test_data
 
     spec = build_gemm(TI=6, TK=8, TJ=6, unroll=1)
-    m = map_kernel(spec.dfg, spec.arch, spec.layout)
-    cfg = generate_config(m, spec.layout)
+    ck = Toolchain(cache_dir="").compile(spec)
     data = generate_test_data(spec)
-    n_cycles = cfg.n_cycles(spec.mapped_iters) * len(spec.invocations)
-    simulate(cfg, data.init_banks, spec.invocations, spec.mapped_iters)
+    n_cycles = ck.cfg.n_cycles(spec.mapped_iters) * len(spec.invocations)
+    ck.run(data.init_banks)
     t0 = time.time()
-    simulate(cfg, data.init_banks, spec.invocations, spec.mapped_iters)
+    ck.run(data.init_banks)
     dt = time.time() - t0
     print(f"simulator_gemm,{dt*1e6:.0f},cycles={n_cycles};"
           f"cycles_per_s={n_cycles/dt:.0f}")
+
+
+def bench_toolchain_cache() -> None:
+    """Cold vs warm compile of the Table-I kernel set through the content-
+    addressed artifact cache (small dims, identical DFG structure)."""
+    from repro.core.kernels_lib import table1_kernels
+    from repro.core.mapper import MapperOptions
+    from repro.core.toolchain import Toolchain
+
+    # no per-kernel wall-clock budget: the cold pass measures full mapper
+    # cost, and budgets misfire under CPU oversubscription anyway
+    opts = MapperOptions(seeds=tuple(range(8)))
+    cache = tempfile.mkdtemp(prefix="morpher-cache-bench-")
+    try:
+        specs = list(table1_kernels(small=True).values())
+        t0 = time.time()
+        Toolchain(options=opts, cache_dir=cache).compile_many(specs)
+        cold = time.time() - t0
+        # fresh Toolchain: no in-process memo, artifacts come off disk
+        t0 = time.time()
+        warm_cks = Toolchain(options=opts, cache_dir=cache).compile_many(
+            list(table1_kernels(small=True).values()))
+        warm = time.time() - t0
+        assert all(ck.from_cache for ck in warm_cks)
+        print(f"toolchain_cache,{cold*1e6:.0f},"
+              f"warm_us={warm*1e6:.0f};kernels={len(specs)};"
+              f"speedup={cold/warm:.1f}x")
+    finally:
+        shutil.rmtree(cache, ignore_errors=True)
 
 
 def main() -> None:
@@ -97,6 +130,8 @@ def main() -> None:
     bench_kernel_micro()
     print("# === simulator throughput ===")
     bench_sim_throughput()
+    print("# === toolchain artifact cache (cold vs warm) ===")
+    bench_toolchain_cache()
 
 
 if __name__ == "__main__":

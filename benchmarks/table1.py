@@ -14,8 +14,8 @@ from typing import Dict, Optional
 from repro.core.costmodel import (F_CLK_HZ, KernelCost, conv_traffic_bytes,
                                   gemm_traffic_bytes, kernel_cost)
 from repro.core.kernels_lib import table1_kernels
-from repro.core.mapper import MapError, Mapping, map_kernel
-from repro.core.verify import verify_mapping
+from repro.core.mapper import MapError, MapperOptions
+from repro.core.toolchain import Toolchain
 
 PAPER = {  # Table I of the paper
     "GEMM":       dict(nodes=26, II=4, mii=4, util=40.63, compute=0.56,
@@ -48,26 +48,27 @@ PROBLEM_SCALE = {   # sequential tile steps per cluster for the full problem
 HANDSHAKE_US = 20.0   # per-invocation host handshake (calibrated: CONV base)
 
 
-def run(verify: bool = True, time_budget_s: float = 120.0,
-        seeds=range(8)) -> Dict[str, Optional[KernelCost]]:
+def run(verify: bool = True, options: Optional[MapperOptions] = None
+        ) -> Dict[str, Optional[KernelCost]]:
+    options = options or MapperOptions(seeds=tuple(range(8)),
+                                       time_budget_s=120.0)
+    toolchain = Toolchain(options=options)
     small = table1_kernels(small=True)
     full = table1_kernels(small=False)
     results: Dict[str, Optional[KernelCost]] = {}
     base_total = {}
     for name, spec in full.items():
         try:
-            mapping = map_kernel(spec.dfg, spec.arch, spec.layout,
-                                 seeds=seeds, ii_max=32,
-                                 time_budget_s=time_budget_s)
+            ck = toolchain.compile(spec)
         except MapError as e:
             print(f"# {name}: MAPPING FAILED ({e})")
             results[name] = None
             continue
         if verify:
             # verify with the structurally-identical small-dims variant
-            verify_mapping(small[name])
+            toolchain.compile(small[name]).verify()
         cost = kernel_cost(
-            spec, mapping, problem_scale=PROBLEM_SCALE[name],
+            spec, ck.mapping, problem_scale=PROBLEM_SCALE[name],
             array_bytes_moved=TRAFFIC[name], handshake_us=HANDSHAKE_US)
         base = "GEMM" if name.startswith("GEMM") else "CONV"
         if name == base:

@@ -1,22 +1,32 @@
-"""Quickstart: the complete Morpher flow on one GEMM micro-kernel.
+"""Quickstart: the complete Morpher flow through the unified compile API.
 
-  1. describe the target CGRA with the ADL (paper's 4x4 cluster),
-  2. build the annotated-loop DFG (Listing 1),
-  3. map it (modulo scheduling on the MRRG),
-  4. generate the cycle-by-cycle configuration,
-  5. generate test data, simulate cycle-accurately in JAX, verify memory.
+The paper's pipeline (Fig. 3) — ADL architecture, annotated-loop DFG,
+modulo-scheduling mapper, configuration generation, cycle-accurate JAX
+simulation, functional verification — is exposed as one staged object:
+
+    Toolchain(arch, options).compile(spec) -> CompiledKernel
+
+`CompiledKernel` is the serializable compiled artifact: it bundles the
+DFG, the data layout, the mapping and the generated configuration, and
+carries `run(init_banks)` / `verify(seed)` / `to_json()` methods.  Compiles
+are memoized through a content-addressed on-disk cache (keyed by DFG +
+arch ADL JSON + MapperOptions), so re-compiling the same kernel — in this
+process, another process, or a later session — returns in milliseconds
+without re-running placement and routing.  Cache location:
+$MORPHER_CACHE_DIR (default ~/.cache/morpher-toolchain; set it to "" to
+disable).
 
 Run:  PYTHONPATH=src python examples/quickstart.py
+      (or `pip install -e .` once and drop the PYTHONPATH)
 """
 import sys
+import time
+
 sys.path.insert(0, "src")
 
-from repro.core.adl import cluster_4x4
-from repro.core.config_gen import generate_config
-from repro.core.kernels_lib import build_gemm
-from repro.core.mapper import map_kernel
-from repro.core.simulator import simulate
-from repro.core.verify import generate_test_data, verify_mapping
+from repro.core import (CompiledKernel, MapperOptions, Toolchain,
+                        build_gemm, cluster_4x4)
+from repro.core.verify import generate_test_data
 
 
 def main():
@@ -30,27 +40,41 @@ def main():
     print(f"kernel: {spec.name}, DFG nodes={spec.dfg.n_nodes} "
           f"(mem={spec.dfg.n_mem_nodes})")
 
-    # 3. map (II escalation from MII)
-    mapping = map_kernel(spec.dfg, arch, spec.layout)
-    print(f"mapped: II={mapping.II} (MII={mapping.mii}, "
-          f"{mapping.mii_parts}), utilization={mapping.utilization:.1%}, "
-          f"pipeline depth={mapping.depth}")
+    # 3. compile: map (II escalation from MII) + configuration generation,
+    #    memoized through the content-addressed artifact cache
+    tc = Toolchain(arch, MapperOptions())
+    t0 = time.time()
+    ck = tc.compile(spec)
+    print(f"compiled in {(time.time()-t0)*1e3:.0f} ms "
+          f"({'cache hit' if ck.from_cache else 'cold'}): II={ck.II} "
+          f"(MII={ck.mii}, {ck.mapping.mii_parts}), "
+          f"utilization={ck.utilization:.1%}, pipeline depth={ck.depth}")
+    print(f"artifact key: {ck.cache_key[:16]}…  "
+          f"config: {ck.cfg.II} slots x {ck.cfg.P} PEs")
 
-    # 4. configuration bitstream
-    cfg = generate_config(mapping, spec.layout)
-    print(f"config: {cfg.II} slots x {cfg.P} PEs, "
-          f"{len(cfg.to_json())} bytes serialized")
+    # 4. test data -> simulate -> verify (paper section IV-C, one call)
+    ck.verify()
+    print("verification: post-simulation memory == golden model: True")
 
-    # 5. test data -> simulate -> verify (paper section IV-C)
+    # ... run() alone for custom inputs:
     data = generate_test_data(spec)
-    final = simulate(cfg, data.init_banks, spec.invocations,
-                     spec.mapped_iters)
-    ok = all((final[k] == data.expected_banks[k]).all()
-             for k in final)
-    print(f"verification: post-simulation memory == golden model: {ok}")
-    assert ok
-    # or in one call:
-    verify_mapping(spec, mapping=mapping, cfg=cfg)
+    final = ck.run(data.init_banks)
+    assert all((final[k] == data.expected_banks[k]).all() for k in final)
+
+    # 5. the artifact round-trips through JSON and still verifies
+    #    bit-exactly — no Python closures needed on the consuming side
+    art = ck.to_json()
+    ck2 = CompiledKernel.from_json(art)
+    ck2.verify()
+    print(f"artifact: {len(art)} bytes JSON; reloaded copy verifies "
+          f"bit-exactly")
+
+    # 6. a second compile of the same spec is a cache hit
+    t0 = time.time()
+    again = Toolchain(arch).compile(build_gemm(TI=6, TK=8, TJ=6, unroll=1,
+                                               arch=arch))
+    print(f"recompile: {(time.time()-t0)*1e3:.0f} ms, "
+          f"from_cache={again.from_cache}")
     print("quickstart OK")
 
 

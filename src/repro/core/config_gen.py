@@ -80,6 +80,23 @@ class SimConfig:
              for k, v in self.__dict__.items()}
         return json.dumps(d)
 
+    _ARRAY_DTYPES = {
+        "op": np.int32, "imm": np.int32, "src_kind": np.int32,
+        "src_idx": np.int32, "force_before": np.int32, "force_val": np.int32,
+        "xo_kind": np.int32, "xo_idx": np.int32, "rf_kind": np.int32,
+        "rf_idx": np.int32, "mem_off": np.int32, "mem_words": np.int32,
+        "valid_start": np.int32, "nbr_idx": np.int32, "nbr_ok": bool,
+    }
+
+    @staticmethod
+    def from_json(s: str) -> "SimConfig":
+        d = json.loads(s)
+        for k, dt in SimConfig._ARRAY_DTYPES.items():
+            d[k] = np.asarray(d[k], dtype=dt)
+        d["lireg_assign"] = {name: tuple(v)
+                             for name, v in d["lireg_assign"].items()}
+        return SimConfig(**d)
+
 
 class ConfigConflict(RuntimeError):
     pass

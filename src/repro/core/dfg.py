@@ -22,6 +22,7 @@ CGRA simulation must produce the same final memory state.
 from __future__ import annotations
 
 import enum
+import json
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
@@ -183,6 +184,40 @@ class DFG:
                     f"node {n.id} op {n.op} expects {nops} operands, "
                     f"got {len(n.operands)}")
         self.topo_order()  # raises on dist-0 cycles
+
+    # --------------------------------------------------------- serialization
+    def to_json_dict(self) -> dict:
+        """JSON-able structural form (same idiom as the ADL round-trip)."""
+        nodes = []
+        for nid in sorted(self.nodes):
+            n = self.nodes[nid]
+            nodes.append({
+                "id": n.id, "op": n.op.value,
+                "operands": [[o.src, o.dist, o.init] for o in n.operands],
+                "imm": n.imm, "livein": n.livein, "array": n.array,
+                "name": n.name,
+            })
+        return {"name": self.name, "nodes": nodes,
+                "mem_deps": [[m.src, m.dst, m.dist] for m in self.mem_deps]}
+
+    @staticmethod
+    def from_json_dict(d: dict) -> "DFG":
+        dfg = DFG(d["name"])
+        for nd in d["nodes"]:
+            dfg.nodes[nd["id"]] = Node(
+                id=nd["id"], op=Op(nd["op"]),
+                operands=tuple(Operand(src, dist, init)
+                               for src, dist, init in nd["operands"]),
+                imm=nd["imm"], livein=nd["livein"], array=nd["array"],
+                name=nd["name"])
+        dfg.mem_deps = [MemDep(src, dst, dist)
+                        for src, dst, dist in d["mem_deps"]]
+        return dfg
+
+    def canonical_json(self) -> str:
+        """Stable canonical form — the content-addressing key component."""
+        return json.dumps(self.to_json_dict(), sort_keys=True,
+                          separators=(",", ":"))
 
     # ------------------------------------------------------- oracle semantics
     def reference_execute(self, n_iters: int, arrays: Dict[str, List[int]],

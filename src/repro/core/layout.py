@@ -49,6 +49,18 @@ class DataLayout:
         assert 0 <= flat_index < p.words, (name, flat_index, p.words)
         return p.base + flat_index
 
+    # --------------------------------------------------------- serialization
+    def to_json_dict(self) -> dict:
+        """Placements only; the arch is serialized separately (ADL JSON)."""
+        return {"placements": {name: [p.words, p.bank, p.base]
+                               for name, p in sorted(self.placements.items())}}
+
+    @staticmethod
+    def from_json_dict(d: dict, arch: CGRAArch) -> "DataLayout":
+        return DataLayout(arch, {
+            name: Placement(name, words, bank, base)
+            for name, (words, bank, base) in d["placements"].items()})
+
 
 def assign_layout(arch: CGRAArch, arrays: Sequence[ArrayDecl],
                   banks: Optional[Sequence[int]] = None) -> DataLayout:

@@ -20,6 +20,7 @@ MII = max(ResMII, RecMII):
 from __future__ import annotations
 
 import random
+import warnings
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
@@ -27,6 +28,39 @@ from .adl import CGRAArch
 from .dfg import DFG, Node, Op, Operand, latency
 from .layout import DataLayout
 from .mrrg import F, R, Route, Usage, commit_route, release_route, route_value
+
+
+# ----------------------------------------------------------------- options
+@dataclass(frozen=True)
+class MapperOptions:
+    """The one place mapper search knobs live (paper's DRESC loop limits).
+
+    Every caller of the flow — toolchain, offload analyzer, benchmarks,
+    examples — goes through this dataclass instead of scattering raw
+    ``ii_max``/``seeds``/``time_budget_s`` arguments.  The defaults are the
+    project-wide policy: II escalation up to 32 (every Table-I kernel maps
+    well below that), four placement seeds per II, no wall-clock budget.
+    """
+    ii_max: int = 32
+    seeds: Tuple[int, ...] = (0, 1, 2, 3)
+    ii_start: Optional[int] = None
+    time_budget_s: Optional[float] = None
+
+    def __post_init__(self):
+        object.__setattr__(self, "seeds", tuple(self.seeds))
+
+    # JSON round-trip (same idiom as the ADL) — feeds the content-addressed
+    # compile cache key, so it must be stable and canonical.
+    def to_json_dict(self) -> dict:
+        return {"ii_max": self.ii_max, "seeds": list(self.seeds),
+                "ii_start": self.ii_start,
+                "time_budget_s": self.time_budget_s}
+
+    @staticmethod
+    def from_json_dict(d: dict) -> "MapperOptions":
+        return MapperOptions(ii_max=d["ii_max"], seeds=tuple(d["seeds"]),
+                             ii_start=d["ii_start"],
+                             time_budget_s=d["time_budget_s"])
 
 
 # --------------------------------------------------------------------- MII
@@ -114,6 +148,58 @@ class Mapping:
     def schedule_len(self, n_iters: int) -> int:
         """Cycles to run n_iters pipelined iterations (fill + steady + drain)."""
         return (n_iters - 1) * self.II + self.depth
+
+    # --------------------------------------------------------- serialization
+    def to_json_dict(self) -> dict:
+        """JSON-able form of everything except dfg/arch (serialized by the
+        artifact that owns this mapping)."""
+        def route_dict(r: Route) -> dict:
+            return {"value": r.value, "src_pe": r.src_pe, "t_src": r.t_src,
+                    "dst_pe": r.dst_pe, "t_dst": r.t_dst,
+                    "steps": [list(s) for s in r.steps],
+                    "uses": [[list(k), list(i)] for k, i in r.uses]}
+
+        return {
+            "II": self.II, "mii": self.mii, "mii_parts": self.mii_parts,
+            "place": [[v, pe, t] for v, (pe, t) in sorted(self.place.items())],
+            "routes": [[src, dst, slot, route_dict(r)]
+                       for (src, dst, slot), r in sorted(self.routes.items())],
+            "usage": [[list(k), sorted(list(i) for i in insts)]
+                      for k, insts in sorted(self.usage.map.items(),
+                                             key=lambda kv: repr(kv[0]))],
+            "reg_assign": [[pe, val, t, reg] for (pe, val, t), reg
+                           in sorted(self.reg_assign.items())],
+            "lireg_assign": {name: list(v)
+                             for name, v in sorted(self.lireg_assign.items())},
+            "bank_of": [[v, b] for v, b in sorted(self.bank_of.items())],
+        }
+
+    @staticmethod
+    def from_json_dict(d: dict, dfg: DFG, arch: CGRAArch) -> "Mapping":
+        def route_from(rd: dict) -> Route:
+            return Route(value=rd["value"], src_pe=rd["src_pe"],
+                         t_src=rd["t_src"], dst_pe=rd["dst_pe"],
+                         t_dst=rd["t_dst"],
+                         steps=[tuple(s) for s in rd["steps"]],
+                         uses=[(tuple(k), tuple(i)) for k, i in rd["uses"]])
+
+        usage = Usage(arch, d["II"])
+        for k, insts in d["usage"]:
+            for inst in insts:
+                usage.add(tuple(k), tuple(inst))
+        return Mapping(
+            dfg=dfg, arch=arch, II=d["II"], mii=d["mii"],
+            mii_parts=dict(d["mii_parts"]),
+            place={v: (pe, t) for v, pe, t in d["place"]},
+            routes={(src, dst, slot): route_from(rd)
+                    for src, dst, slot, rd in d["routes"]},
+            usage=usage,
+            reg_assign={(pe, val, t): reg
+                        for pe, val, t, reg in d["reg_assign"]},
+            lireg_assign={name: tuple(v)
+                          for name, v in d["lireg_assign"].items()},
+            bank_of={v: b for v, b in d["bank_of"]},
+        )
 
 
 class MapError(RuntimeError):
@@ -627,20 +713,24 @@ def _assign_liregs(arch: CGRAArch, dfg: DFG,
     return out
 
 
-def map_kernel(dfg: DFG, arch: CGRAArch, layout: DataLayout,
-               ii_max: int = 64, seeds: Sequence[int] = (0, 1, 2, 3),
-               ii_start: Optional[int] = None,
-               time_budget_s: Optional[float] = None) -> Mapping:
+def map_kernel_opts(dfg: DFG, arch: CGRAArch, layout: DataLayout,
+                    options: Optional[MapperOptions] = None) -> Mapping:
     """Map a DFG onto the CGRA: returns the first feasible Mapping,
-    escalating II from MII (DRESC/Morpher semantics)."""
+    escalating II from MII (DRESC/Morpher semantics).
+
+    This is the canonical mapper entry point; search limits come from one
+    :class:`MapperOptions`.  Prefer `repro.core.toolchain.Toolchain.compile`
+    which adds configuration generation and artifact caching on top.
+    """
     import time as _time
-    deadline = _time.time() + time_budget_s if time_budget_s else None
+    opt = options or MapperOptions()
+    deadline = _time.time() + opt.time_budget_s if opt.time_budget_s else None
     dfg.validate()
     bank_of = _bank_of_nodes(dfg, layout)
     mii, parts = compute_mii(dfg, arch, bank_of)
-    start = max(mii, ii_start or 0)
-    for II in range(start, ii_max + 1):
-        for seed in seeds:
+    start = max(mii, opt.ii_start or 0)
+    for II in range(start, opt.ii_max + 1):
+        for seed in opt.seeds:
             if deadline and _time.time() > deadline:
                 raise MapError(f"{dfg.name}: time budget exhausted at "
                                f"II={II} (MII={mii})")
@@ -656,5 +746,22 @@ def map_kernel(dfg: DFG, arch: CGRAArch, layout: DataLayout,
                            mii_parts=parts, place=place, routes=routes,
                            usage=usage, reg_assign=regs,
                            lireg_assign=liregs, bank_of=bank_of)
-    raise MapError(f"{dfg.name}: no mapping found with II <= {ii_max} "
+    raise MapError(f"{dfg.name}: no mapping found with II <= {opt.ii_max} "
                    f"(MII={mii}, parts={parts})")
+
+
+def map_kernel(dfg: DFG, arch: CGRAArch, layout: DataLayout,
+               ii_max: int = 64, seeds: Sequence[int] = (0, 1, 2, 3),
+               ii_start: Optional[int] = None,
+               time_budget_s: Optional[float] = None) -> Mapping:
+    """Deprecated shim — use ``Toolchain.compile(spec)`` (or, for a bare
+    DFG, :func:`map_kernel_opts` with a :class:`MapperOptions`)."""
+    warnings.warn(
+        "map_kernel(dfg, arch, layout, ii_max=..., ...) is deprecated; "
+        "use repro.core.toolchain.Toolchain.compile(spec) or "
+        "map_kernel_opts(dfg, arch, layout, MapperOptions(...))",
+        DeprecationWarning, stacklevel=2)
+    return map_kernel_opts(dfg, arch, layout,
+                           MapperOptions(ii_max=ii_max, seeds=tuple(seeds),
+                                         ii_start=ii_start,
+                                         time_budget_s=time_budget_s))

@@ -11,14 +11,15 @@ per-tile latency — Table-I methodology applied to the model zoo
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Tuple
+from typing import List, Optional, Tuple
 
 from ..configs.registry import get_config
 from ..models.common import ModelConfig
 from .adl import cluster_4x4
 from .costmodel import F_CLK_HZ
 from .kernels_lib import build_gemm
-from .mapper import MapError, Mapping, map_kernel
+from .mapper import MapError
+from .toolchain import CompiledKernel, Toolchain, default_toolchain
 
 
 @dataclass
@@ -58,38 +59,40 @@ class OffloadReport:
 
 
 def analyze_gemm_tile(TI: int = 16, TK: int = 8, TJ: int = 16,
-                      unroll: int = 4, arch=None) -> Tuple[Mapping, object]:
-    arch = arch or cluster_4x4()
+                      unroll: int = 4, arch=None,
+                      toolchain: Optional[Toolchain] = None
+                      ) -> CompiledKernel:
+    tc = toolchain or default_toolchain()
+    arch = arch or tc.arch or cluster_4x4()
     spec = build_gemm(TI=TI, TK=TK, TJ=TJ, arch=arch,
                       unroll=min(unroll, TK), coalesced=False)
-    mapping = map_kernel(spec.dfg, arch, spec.layout, ii_max=32)
-    return mapping, spec
+    return tc.compile(spec)
 
 
 def analyze_arch_gemms(arch_id: str, tokens: int = 64,
-                       max_kernels: Optional[int] = None
+                       max_kernels: Optional[int] = None,
+                       toolchain: Optional[Toolchain] = None
                        ) -> List[OffloadReport]:
+    tc = toolchain or default_toolchain()
     cfg = get_config(arch_id)
     sites = model_gemm_sites(cfg, tokens)
     if max_kernels:
         sites = sites[:max_kernels]
     out: List[OffloadReport] = []
-    cache: Dict[Tuple[int, int, int], Tuple[Mapping, object]] = {}
     for s in sites:
         # the on-chip tile is bank-capacity bound, not site-size bound —
-        # one mapped tile is reused across the whole site (paper IV-A)
+        # one compiled tile is reused across the whole site (paper IV-A);
+        # the toolchain's content-addressed cache dedups the compile across
+        # sites, models, processes and sessions.
         tile = (16, 8, 16)
-        if tile not in cache:
-            try:
-                cache[tile] = analyze_gemm_tile(*tile)
-            except MapError:
-                continue
-        mapping, spec = cache[tile]
-        iters = spec.mapped_iters
-        cyc = (iters - 1) * mapping.II + mapping.depth
+        try:
+            ck = analyze_gemm_tile(*tile, toolchain=tc)
+        except MapError:
+            continue
+        cyc = ck.schedule_cycles()
         invocations = tile[0] * tile[2]  # per-(i,j) invocations per tile
         out.append(OffloadReport(
-            site=s.name, tile=tile, nodes=spec.dfg.n_nodes, II=mapping.II,
-            mii=mapping.mii, utilization=mapping.utilization,
+            site=s.name, tile=tile, nodes=ck.dfg.n_nodes, II=ck.II,
+            mii=ck.mii, utilization=ck.utilization,
             est_tile_us=invocations * cyc / F_CLK_HZ * 1e6))
     return out

@@ -1,0 +1,436 @@
+"""Unified compile API: the paper's integrated flow as one staged object.
+
+Morpher's core claim (paper Fig. 3) is that ADL, DFG generation, mapping,
+configuration generation, simulation and verification form *one* pipeline.
+This module is that pipeline's front door:
+
+    tc = Toolchain(options=MapperOptions())        # or default_toolchain()
+    ck = tc.compile(spec)                          # KernelSpec -> artifact
+    ck.run(init_banks)                             # cycle-accurate simulate
+    ck.verify()                                    # paper IV-C flow
+    text = ck.to_json()                            # serializable artifact
+    ck2 = CompiledKernel.from_json(text)           # ... reload anywhere
+    ck2.verify()                                   # still bit-exact
+
+``CompiledKernel`` bundles everything the downstream stages need — the DFG,
+data layout, the :class:`Mapping`, and the generated :class:`SimConfig` —
+and is fully JSON-serializable (CGRA4ML-style artifact-oriented HW/SW
+handoff).  A deserialized artifact carries no Python closures, so its
+``verify`` falls back to the DFG's sequential reference execution as the
+oracle; both paths are bit-exact comparisons of final memory images.
+
+Compiles are memoized through a content-addressed on-disk cache keyed by a
+stable SHA-256 of (DFG canonical form, arch ADL JSON, mapper options, data
+layout, invocation schedule).  Re-mapping the same tile — which the edge-
+deployment analyzer does for every GEMM site of every model — is a cache
+hit across processes and sessions.  Cache location: ``$MORPHER_CACHE_DIR``
+(default ``~/.cache/morpher-toolchain``; set it to the empty string, or
+pass ``cache_dir=""``, to disable the on-disk cache).
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import multiprocessing
+import os
+import sys
+import tempfile
+import threading
+from concurrent.futures import ProcessPoolExecutor
+from concurrent.futures.process import BrokenProcessPool
+from dataclasses import dataclass
+from typing import Dict, Iterable, List, Optional
+
+import numpy as np
+
+from .adl import CGRAArch
+from .config_gen import SimConfig, generate_config
+from .dfg import DFG
+from .kernels_lib import KernelSpec
+from .layout import DataLayout
+from .mapper import Mapping, MapperOptions, map_kernel_opts
+
+ARTIFACT_VERSION = 1
+CACHE_ENV = "MORPHER_CACHE_DIR"
+
+
+def default_cache_dir() -> str:
+    """Resolve the on-disk artifact cache directory.
+
+    ``$MORPHER_CACHE_DIR`` overrides; an empty value disables caching.
+    """
+    env = os.environ.get(CACHE_ENV)
+    if env is not None:
+        return env
+    return os.path.join(os.path.expanduser("~"), ".cache",
+                        "morpher-toolchain")
+
+
+def spec_cache_key(spec: KernelSpec, options: MapperOptions) -> str:
+    """Content address of a compile: everything that determines the
+    artifact, nothing that doesn't (golden-model closures are derived from
+    the same structural inputs and deliberately excluded)."""
+    ident = {
+        "v": ARTIFACT_VERSION,
+        "dfg": spec.dfg.to_json_dict(),
+        "arch": json.loads(spec.arch.to_json()),
+        "options": options.to_json_dict(),
+        "layout": spec.layout.to_json_dict(),
+        "mapped_iters": spec.mapped_iters,
+        "invocations": spec.invocations,
+        "meta": spec.meta,
+        "name": spec.name,
+    }
+    blob = json.dumps(ident, sort_keys=True, separators=(",", ":"))
+    return hashlib.sha256(blob.encode()).hexdigest()
+
+
+def _compile_worker(payload: str) -> str:
+    """Process-pool worker: map + generate config from the JSON form of the
+    compile inputs (specs carry unpicklable closures; their structural parts
+    round-trip losslessly).  Pure Python/numpy — no JAX in the child."""
+    d = json.loads(payload)
+    arch = CGRAArch.from_json(json.dumps(d["arch"]))
+    dfg = DFG.from_json_dict(d["dfg"])
+    layout = DataLayout.from_json_dict(d["layout"], arch)
+    opt = MapperOptions.from_json_dict(d["options"])
+    mapping = map_kernel_opts(dfg, arch, layout, opt)
+    cfg = generate_config(mapping, layout)
+    return json.dumps({"mapping": mapping.to_json_dict(),
+                       "cfg": json.loads(cfg.to_json())})
+
+
+# --------------------------------------------------------------------------
+@dataclass
+class CompiledKernel:
+    """The serializable product of one compile: spec metadata + mapping +
+    configuration + layout, with run/verify attached."""
+    name: str
+    arch: CGRAArch
+    dfg: DFG
+    layout: DataLayout
+    mapping: Mapping
+    cfg: SimConfig
+    mapped_iters: int
+    invocations: List[Dict[str, int]]
+    meta: Dict[str, int]
+    options: MapperOptions
+    cache_key: str
+    # transient: the builder spec (golden model + bank init closures); not
+    # serialized, absent on artifacts reloaded from JSON.
+    spec: Optional[KernelSpec] = None
+    from_cache: bool = False
+
+    # ------------------------------------------------------------ metadata
+    @property
+    def II(self) -> int:
+        return self.mapping.II
+
+    @property
+    def mii(self) -> int:
+        return self.mapping.mii
+
+    @property
+    def utilization(self) -> float:
+        return self.mapping.utilization
+
+    @property
+    def depth(self) -> int:
+        return self.mapping.depth
+
+    def schedule_cycles(self) -> int:
+        """Cycles per invocation (fill + steady state + drain)."""
+        return self.mapping.schedule_len(self.mapped_iters)
+
+    # ------------------------------------------------------------ execution
+    def run(self, init_banks: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
+        """Cycle-accurately simulate all invocations; returns final banks."""
+        from .simulator import simulate
+        return simulate(self.cfg, init_banks, self.invocations,
+                        self.mapped_iters)
+
+    def random_banks(self, seed: int = 0) -> Dict[str, np.ndarray]:
+        """Deterministic random bank images over the target's banks — the
+        self-contained test-data generator for deserialized artifacts."""
+        rng = np.random.default_rng(seed)
+        return {f"bank{i}": rng.integers(-8, 8, size=w).astype(np.int64)
+                for i, w in enumerate(self.layout.bank_image_size())}
+
+    def verify(self, seed: int = 0, check_dfg: bool = True
+               ) -> "CompiledKernel":
+        """Paper IV-C functional verification; raises AssertionError on any
+        final-memory mismatch, returns self on success.
+
+        With the builder spec attached (fresh compiles), the oracle is the
+        kernel's golden numpy model on spec-generated test data.  Without it
+        (artifacts reloaded from JSON), the oracle is sequential DFG
+        reference execution on deterministic random bank images — the same
+        bit-exact contract, self-contained in the artifact.
+        """
+        if self.spec is not None:
+            from .verify import check_dfg_semantics, generate_test_data
+            data = generate_test_data(self.spec, seed)
+            if check_dfg:
+                check_dfg_semantics(self.spec, data)
+            init, expected = data.init_banks, data.expected_banks
+        else:
+            from .verify import reference_banks
+            init = self.random_banks(seed)
+            banks = reference_banks(self.dfg, init, self.invocations,
+                                    self.mapped_iters,
+                                    self.arch.datapath_bits)
+            expected = {k: np.asarray(v) for k, v in banks.items()}
+        final = self.run(init)
+        for bank, exp in expected.items():
+            got = np.asarray(final[bank])
+            exp = np.asarray(exp)
+            if not np.array_equal(got, exp):
+                bad = np.nonzero(got != exp)[0][:8]
+                raise AssertionError(
+                    f"{self.name} (II={self.II}): simulation mismatch in "
+                    f"{bank} at words {bad.tolist()}: got {got[bad]}, "
+                    f"want {exp[bad]}")
+        return self
+
+    # --------------------------------------------------------- serialization
+    def to_json(self) -> str:
+        return json.dumps({
+            "version": ARTIFACT_VERSION,
+            "name": self.name,
+            "cache_key": self.cache_key,
+            "mapped_iters": self.mapped_iters,
+            "invocations": self.invocations,
+            "meta": self.meta,
+            "arch": json.loads(self.arch.to_json()),
+            "dfg": self.dfg.to_json_dict(),
+            "layout": self.layout.to_json_dict(),
+            "options": self.options.to_json_dict(),
+            "mapping": self.mapping.to_json_dict(),
+            "cfg": json.loads(self.cfg.to_json()),
+        })
+
+    @staticmethod
+    def from_json(s: str) -> "CompiledKernel":
+        d = json.loads(s)
+        if d.get("version") != ARTIFACT_VERSION:
+            raise ValueError(f"artifact version {d.get('version')} != "
+                             f"{ARTIFACT_VERSION}")
+        arch = CGRAArch.from_json(json.dumps(d["arch"]))
+        dfg = DFG.from_json_dict(d["dfg"])
+        return CompiledKernel(
+            name=d["name"], arch=arch, dfg=dfg,
+            layout=DataLayout.from_json_dict(d["layout"], arch),
+            mapping=Mapping.from_json_dict(d["mapping"], dfg, arch),
+            cfg=SimConfig.from_json(json.dumps(d["cfg"])),
+            mapped_iters=d["mapped_iters"],
+            invocations=d["invocations"], meta=d["meta"],
+            options=MapperOptions.from_json_dict(d["options"]),
+            cache_key=d["cache_key"])
+
+
+# --------------------------------------------------------------------------
+class Toolchain:
+    """The staged compile pipeline with artifact caching.
+
+    arch:      default target for helpers; ``compile`` always maps a spec
+               onto the architecture the spec was built against.
+    options:   MapperOptions shared by every compile from this toolchain.
+    cache_dir: on-disk artifact cache; None -> $MORPHER_CACHE_DIR or
+               ~/.cache/morpher-toolchain, "" -> disk cache disabled.
+    """
+
+    def __init__(self, arch: Optional[CGRAArch] = None,
+                 options: Optional[MapperOptions] = None,
+                 cache_dir: Optional[str] = None):
+        self.arch = arch
+        self.options = options or MapperOptions()
+        self.cache_dir = (default_cache_dir() if cache_dir is None
+                          else cache_dir)
+        self._memo: Dict[str, CompiledKernel] = {}
+        self._lock = threading.Lock()
+
+    # ----------------------------------------------------------- cache I/O
+    def _cache_path(self, key: str) -> Optional[str]:
+        if not self.cache_dir:
+            return None
+        return os.path.join(self.cache_dir, f"{key}.json")
+
+    def _cache_load(self, key: str) -> Optional[CompiledKernel]:
+        path = self._cache_path(key)
+        if path is None or not os.path.exists(path):
+            return None
+        try:
+            with open(path, "r", encoding="utf-8") as f:
+                ck = CompiledKernel.from_json(f.read())
+        except (OSError, ValueError, KeyError, TypeError,
+                json.JSONDecodeError):
+            return None  # corrupt/stale artifact: fall through to recompile
+        ck.from_cache = True
+        return ck
+
+    def _cache_store(self, key: str, ck: CompiledKernel) -> None:
+        path = self._cache_path(key)
+        if path is None:
+            return
+        tmp = None
+        try:
+            os.makedirs(self.cache_dir, exist_ok=True)
+            fd, tmp = tempfile.mkstemp(dir=self.cache_dir, suffix=".tmp")
+            with os.fdopen(fd, "w", encoding="utf-8") as f:
+                f.write(ck.to_json())
+            os.replace(tmp, path)  # atomic: concurrent compilers race safely
+            tmp = None
+        except OSError:
+            pass  # cache is an optimization; never fail the compile
+        finally:
+            if tmp is not None:
+                try:
+                    os.unlink(tmp)
+                except OSError:
+                    pass
+
+    def clear_cache(self) -> None:
+        self._memo.clear()
+        if self.cache_dir and os.path.isdir(self.cache_dir):
+            for fn in os.listdir(self.cache_dir):
+                if fn.endswith((".json", ".tmp")):
+                    try:
+                        os.unlink(os.path.join(self.cache_dir, fn))
+                    except OSError:
+                        pass
+
+    # ------------------------------------------------------------- compile
+    def _lookup(self, key: str, spec: KernelSpec
+                ) -> Optional[CompiledKernel]:
+        with self._lock:
+            hit = self._memo.get(key)
+        if hit is not None:
+            return hit
+        hit = self._cache_load(key)
+        if hit is not None:
+            hit.spec = spec
+            with self._lock:
+                self._memo[key] = hit
+        return hit
+
+    def _finish(self, spec: KernelSpec, opt: MapperOptions, key: str,
+                mapping: Mapping, cfg: SimConfig,
+                use_cache: bool) -> CompiledKernel:
+        ck = CompiledKernel(
+            name=spec.name, arch=spec.arch, dfg=spec.dfg, layout=spec.layout,
+            mapping=mapping, cfg=cfg, mapped_iters=spec.mapped_iters,
+            invocations=spec.invocations, meta=dict(spec.meta),
+            options=opt, cache_key=key, spec=spec)
+        if use_cache:
+            self._cache_store(key, ck)
+            with self._lock:
+                self._memo[key] = ck
+        return ck
+
+    def compile(self, spec: KernelSpec,
+                options: Optional[MapperOptions] = None,
+                use_cache: bool = True) -> CompiledKernel:
+        """KernelSpec -> CompiledKernel (map + generate configuration).
+
+        Memoized in-process and through the content-addressed disk cache;
+        a hit returns without re-running placement/routing.
+        """
+        opt = options or self.options
+        key = spec_cache_key(spec, opt)
+        if use_cache:
+            hit = self._lookup(key, spec)
+            if hit is not None:
+                return hit
+        mapping = map_kernel_opts(spec.dfg, spec.arch, spec.layout, opt)
+        cfg = generate_config(mapping, spec.layout)
+        return self._finish(spec, opt, key, mapping, cfg, use_cache)
+
+    def compile_many(self, specs: Iterable[KernelSpec],
+                     options: Optional[MapperOptions] = None,
+                     jobs: Optional[int] = None,
+                     use_cache: bool = True) -> List[CompiledKernel]:
+        """Fan independent kernel compiles out across worker processes.
+
+        Cache hits resolve immediately; misses (deduplicated by content
+        address) run concurrently.  The mapper is pure Python and therefore
+        GIL-bound, so the fan-out uses processes, bridging each compile
+        through its JSON form (specs carry unpicklable closures; their
+        structural parts round-trip losslessly).  Falls back to sequential
+        in-process compiles if no process pool is available.
+        """
+        specs = list(specs)
+        opt = options or self.options
+        keys = [spec_cache_key(s, opt) for s in specs]
+        results: List[Optional[CompiledKernel]] = [None] * len(specs)
+        todo: Dict[str, List[int]] = {}      # cache_key -> spec indices
+        for i, (spec, key) in enumerate(zip(specs, keys)):
+            hit = self._lookup(key, spec) if use_cache else None
+            if hit is not None:
+                results[i] = hit
+            else:
+                todo.setdefault(key, []).append(i)
+
+        def finish(key: str, idxs: List[int], mapping: Mapping,
+                   cfg: SimConfig) -> None:
+            ck = self._finish(specs[idxs[0]], opt, key, mapping, cfg,
+                              use_cache)
+            for i in idxs:
+                results[i] = ck
+
+        if jobs is None:
+            jobs = min(len(todo), os.cpu_count() or 1) or 1
+        order = list(todo.items())
+        # worker processes re-import the caller's __main__; if it is not a
+        # real file (REPL/stdin scripts have __file__='<stdin>'), they would
+        # crash on startup — compile sequentially instead
+        main_file = getattr(sys.modules.get("__main__"), "__file__", None)
+        spawnable_main = main_file is None or os.path.exists(main_file)
+        if len(order) > 1 and jobs > 1 and spawnable_main:
+            payloads = [json.dumps({
+                "dfg": specs[idxs[0]].dfg.to_json_dict(),
+                "arch": json.loads(specs[idxs[0]].arch.to_json()),
+                "layout": specs[idxs[0]].layout.to_json_dict(),
+                "options": opt.to_json_dict(),
+            }) for _key, idxs in order]
+            # not fork: the parent often has JAX (multithreaded) loaded and
+            # forking a threaded process can deadlock.  forkserver exec's a
+            # clean server and does not re-import the caller's __main__ per
+            # task (spawn does, which breaks REPL/stdin drivers); workers
+            # only need the pure-numpy mapper import chain.
+            methods = multiprocessing.get_all_start_methods()
+            method = "forkserver" if "forkserver" in methods else "spawn"
+            try:
+                with ProcessPoolExecutor(
+                        max_workers=jobs,
+                        mp_context=multiprocessing.get_context(method)) as ex:
+                    outs = list(ex.map(_compile_worker, payloads))
+            except (OSError, PermissionError, BrokenProcessPool):
+                outs = None  # no process pool available: go sequential
+            if outs is not None:
+                for (key, idxs), out in zip(order, outs):
+                    d = json.loads(out)
+                    spec = specs[idxs[0]]
+                    finish(key, idxs,
+                           Mapping.from_json_dict(d["mapping"], spec.dfg,
+                                                  spec.arch),
+                           SimConfig.from_json(json.dumps(d["cfg"])))
+                order = []
+        for key, idxs in order:              # sequential path / fallback
+            spec = specs[idxs[0]]
+            mapping = map_kernel_opts(spec.dfg, spec.arch, spec.layout, opt)
+            finish(key, idxs, mapping, generate_config(mapping, spec.layout))
+        return results
+
+
+_default: Optional[Toolchain] = None
+_default_lock = threading.Lock()
+
+
+def default_toolchain() -> Toolchain:
+    """Process-wide shared Toolchain with default MapperOptions and the
+    standard cache location — the one-liner entry into the whole flow."""
+    global _default
+    with _default_lock:
+        if _default is None:
+            _default = Toolchain()
+        return _default

@@ -13,9 +13,15 @@ against the expected results.  The same three-step contract here:
      right program" from "the mapping executes the DFG correctly";
   3. simulate the mapped configuration cycle-by-cycle and compare the
      final memory images word-for-word.
+
+The canonical entry point is ``Toolchain.compile(spec).verify(seed)``
+(`repro.core.toolchain`); this module provides the test-data generator and
+the DFG-semantics cross-check it uses, plus the deprecated
+``verify_mapping`` shim.
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass
 from typing import Dict, Optional
 
@@ -23,8 +29,7 @@ import numpy as np
 
 from .config_gen import SimConfig, generate_config
 from .kernels_lib import KernelSpec
-from .mapper import Mapping, map_kernel
-from .simulator import simulate
+from .mapper import Mapping
 
 
 @dataclass
@@ -40,12 +45,21 @@ def generate_test_data(spec: KernelSpec, seed: int = 0) -> TestData:
     return TestData(init_banks=init, expected_banks=expected)
 
 
+def reference_banks(dfg, init_banks, invocations, mapped_iters: int,
+                    bits: int) -> Dict[str, list]:
+    """Fold sequential DFG reference execution over all invocations — the
+    closure-free oracle shared by the DFG cross-check and deserialized-
+    artifact verification."""
+    banks = {k: [int(x) for x in v] for k, v in init_banks.items()}
+    for inv in invocations:
+        banks = dfg.reference_execute(mapped_iters, banks, inv, bits=bits)
+    return banks
+
+
 def check_dfg_semantics(spec: KernelSpec, data: TestData) -> None:
     """Step 2: sequential DFG execution must match the golden model."""
-    banks = {k: [int(x) for x in v] for k, v in data.init_banks.items()}
-    for inv in spec.invocations:
-        banks = spec.dfg.reference_execute(spec.mapped_iters, banks, inv,
-                                           bits=spec.arch.datapath_bits)
+    banks = reference_banks(spec.dfg, data.init_banks, spec.invocations,
+                            spec.mapped_iters, spec.arch.datapath_bits)
     for name, exp in data.expected_banks.items():
         got = np.asarray(banks[name])
         if not np.array_equal(got, exp):
@@ -58,23 +72,27 @@ def check_dfg_semantics(spec: KernelSpec, data: TestData) -> None:
 def verify_mapping(spec: KernelSpec, mapping: Optional[Mapping] = None,
                    cfg: Optional[SimConfig] = None, seed: int = 0,
                    check_dfg: bool = True) -> Mapping:
-    """Full paper-IV-C flow.  Returns the (possibly freshly computed)
-    mapping; raises AssertionError on any mismatch."""
-    data = generate_test_data(spec, seed)
-    if check_dfg:
-        check_dfg_semantics(spec, data)
+    """Deprecated shim — use ``Toolchain.compile(spec).verify(seed)``.
+
+    Returns the (possibly freshly computed) mapping; raises AssertionError
+    on any mismatch, exactly as before.
+    """
+    warnings.warn(
+        "verify_mapping(spec, ...) is deprecated; use "
+        "repro.core.toolchain.Toolchain.compile(spec).verify(seed)",
+        DeprecationWarning, stacklevel=2)
+    from .mapper import MapperOptions
+    from .toolchain import CompiledKernel, Toolchain
+    # legacy semantics exactly: a fresh map with the old map_kernel default
+    # (ii_max=64) and no artifact-cache involvement
+    legacy = MapperOptions(ii_max=64)
     if mapping is None:
-        mapping = map_kernel(spec.dfg, spec.arch, spec.layout)
-    if cfg is None:
-        cfg = generate_config(mapping, spec.layout)
-    final = simulate(cfg, data.init_banks, spec.invocations,
-                     spec.mapped_iters)
-    for name, exp in data.expected_banks.items():
-        got = final[name]
-        if not np.array_equal(got, np.asarray(exp)):
-            bad = np.nonzero(got != np.asarray(exp))[0][:8]
-            raise AssertionError(
-                f"{spec.name} (II={mapping.II}): simulation mismatch in "
-                f"{name} at words {bad.tolist()}: got {got[bad]}, "
-                f"want {np.asarray(exp)[bad]}")
-    return mapping
+        ck = Toolchain(options=legacy, cache_dir="").compile(spec)
+    else:
+        ck = CompiledKernel(
+            name=spec.name, arch=spec.arch, dfg=spec.dfg, layout=spec.layout,
+            mapping=mapping, cfg=cfg or generate_config(mapping, spec.layout),
+            mapped_iters=spec.mapped_iters, invocations=spec.invocations,
+            meta=dict(spec.meta), options=legacy, cache_key="", spec=spec)
+    ck.verify(seed=seed, check_dfg=check_dfg)
+    return ck.mapping

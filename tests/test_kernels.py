@@ -3,6 +3,9 @@ plus hypothesis property tests on the GEMM wrapper."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed (pip install -e '.[test]')")
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels.gemm_os.ops import gemm_os

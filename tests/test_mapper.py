@@ -1,18 +1,20 @@
 """Mapper: MII math, mapping feasibility, and schedule/resource invariants
-(property-checked over the produced mapping)."""
+(property-checked over the produced mapping).  Mappings are produced
+through the Toolchain compile API (disk cache disabled for hermeticity)."""
 import pytest
 
 from repro.core.adl import cluster_4x4
 from repro.core.dfg import latency
 from repro.core.kernels_lib import build_conv, build_gemm
-from repro.core.mapper import Mapping, compute_mii, map_kernel, \
-    _bank_of_nodes, rec_mii
+from repro.core.mapper import Mapping, compute_mii, _bank_of_nodes, rec_mii
+from repro.core.toolchain import Toolchain
 
 
 @pytest.fixture(scope="module")
 def gemm_mapping():
     spec = build_gemm(TI=6, TK=8, TJ=6, unroll=1)
-    return spec, map_kernel(spec.dfg, spec.arch, spec.layout)
+    ck = Toolchain(cache_dir="").compile(spec)
+    return spec, ck.mapping
 
 
 def test_mii_gemm_matches_paper():
@@ -86,5 +88,5 @@ def test_utilization_definition(gemm_mapping):
 
 def test_conv_maps():
     spec = build_conv(OH=5, OW=5, K=3, variant="base")
-    m = map_kernel(spec.dfg, spec.arch, spec.layout)
-    assert m.II == 4  # paper: CONV II=4 (MII 4)
+    ck = Toolchain(cache_dir="").compile(spec)
+    assert ck.II == 4  # paper: CONV II=4 (MII 4)

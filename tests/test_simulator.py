@@ -1,41 +1,43 @@
 """Cycle-accurate simulator vs golden memory images — the paper's
-functional-verification contract (section IV-C) as CI tests."""
+functional-verification contract (section IV-C), driven through the
+Toolchain compile API (disk cache disabled for hermeticity)."""
 import numpy as np
 import pytest
 
-from repro.core.config_gen import generate_config
 from repro.core.kernels_lib import build_conv, build_gemm
-from repro.core.mapper import map_kernel
-from repro.core.verify import generate_test_data, verify_mapping
-from repro.core.simulator import simulate
+from repro.core.toolchain import Toolchain
+from repro.core.verify import generate_test_data
+
+
+@pytest.fixture()
+def tc():
+    return Toolchain(cache_dir="")
 
 
 @pytest.mark.parametrize("seed", [0, 7])
-def test_gemm_base_verifies(seed):
+def test_gemm_base_verifies(seed, tc):
     spec = build_gemm(TI=6, TK=8, TJ=6, unroll=1)
-    m = verify_mapping(spec, seed=seed)
-    assert m.II == m.mii == 4
+    ck = tc.compile(spec).verify(seed=seed)
+    assert ck.II == ck.mii == 4
 
 
-def test_conv_base_verifies():
+def test_conv_base_verifies(tc):
     spec = build_conv(OH=5, OW=5, K=3, variant="base")
-    verify_mapping(spec)
+    tc.compile(spec).verify()
 
 
-def test_simulation_is_deterministic():
+def test_simulation_is_deterministic(tc):
     spec = build_gemm(TI=4, TK=4, TJ=4, unroll=1)
-    m = map_kernel(spec.dfg, spec.arch, spec.layout)
-    cfg = generate_config(m, spec.layout)
+    ck = tc.compile(spec)
     data = generate_test_data(spec, seed=1)
-    a = simulate(cfg, data.init_banks, spec.invocations, spec.mapped_iters)
-    b = simulate(cfg, data.init_banks, spec.invocations, spec.mapped_iters)
+    a = ck.run(data.init_banks)
+    b = ck.run(data.init_banks)
     for k in a:
         np.testing.assert_array_equal(a[k], b[k])
 
 
-def test_config_serializes():
+def test_config_serializes(tc):
     spec = build_gemm(TI=4, TK=4, TJ=4, unroll=1)
-    m = map_kernel(spec.dfg, spec.arch, spec.layout)
-    cfg = generate_config(m, spec.layout)
+    cfg = tc.compile(spec).cfg
     s = cfg.to_json()
     assert len(s) > 100 and '"II"' in s

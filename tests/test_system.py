@@ -1,24 +1,28 @@
 """End-to-end behaviour tests for the paper's system: the full Morpher
 flow (DFG -> map -> configure -> simulate -> verify) on the Table-I
 kernels, the architecture-adaptive ADL, and the edge-deployment analyzer
-over the LM zoo."""
+over the LM zoo — all through the unified Toolchain compile API."""
 import numpy as np
 import pytest
 
 from repro.core.adl import CGRAArch, cluster_4x4, morpher_8x8
 from repro.core.costmodel import gemm_traffic_bytes, kernel_cost
 from repro.core.kernels_lib import build_gemm, table1_kernels
-from repro.core.mapper import map_kernel
-from repro.core.verify import verify_mapping
+from repro.core.toolchain import Toolchain
 
 
-def test_full_flow_gemm_paper_point():
+@pytest.fixture()
+def tc():
+    return Toolchain(cache_dir="")
+
+
+def test_full_flow_gemm_paper_point(tc):
     """The paper's central Table-I row: base GEMM maps at II = MII = 4 and
     the modulo-scheduled pipelined execution reproduces the sequential
     semantics bit-exactly."""
     spec = build_gemm(TI=6, TK=8, TJ=6, unroll=1)
-    m = verify_mapping(spec)
-    assert m.II == 4 and m.mii == 4
+    ck = tc.compile(spec).verify()
+    assert ck.II == 4 and ck.mii == 4
 
 
 def test_adl_roundtrip():
@@ -39,7 +43,7 @@ def test_adl_cluster_matches_paper_target():
     assert c.mem_pes == frozenset({0, 4, 8, 12, 3, 7, 11, 15})
 
 
-def test_architecture_adaptivity_heterogeneous():
+def test_architecture_adaptivity_heterogeneous(tc):
     """Morpher's selling point: user-defined architectures.  Restrict
     multiplies to a 2x2 quadrant and verify mapping adapts."""
     arch = cluster_4x4()
@@ -47,17 +51,17 @@ def test_architecture_adaptivity_heterogeneous():
     arch.per_pe_ops = {p: no_mul for p in range(16)
                        if not (p % 4 < 2 and p < 8)}
     spec = build_gemm(TI=4, TK=4, TJ=4, unroll=1, arch=arch)
-    m = map_kernel(spec.dfg, arch, spec.layout, ii_max=32)
-    for v, (pe, _t) in m.place.items():
+    ck = tc.compile(spec)
+    for v, (pe, _t) in ck.mapping.place.items():
         if spec.dfg.nodes[v].op.value == "mul":
             assert pe in {0, 1, 4, 5}
-    verify_mapping(spec, mapping=m)
+    ck.verify()
 
 
-def test_cost_model_table1_shape():
+def test_cost_model_table1_shape(tc):
     spec = build_gemm(TI=6, TK=8, TJ=6, unroll=1)
-    m = map_kernel(spec.dfg, spec.arch, spec.layout)
-    c = kernel_cost(spec, m, array_bytes_moved=gemm_traffic_bytes(),
+    ck = tc.compile(spec)
+    c = kernel_cost(spec, ck.mapping, array_bytes_moved=gemm_traffic_bytes(),
                     handshake_us=20.0)
     assert c.total_ms > 0 and c.compute_ms > 0 and c.transfer_ms > 0
     assert c.II >= c.mii
@@ -65,7 +69,7 @@ def test_cost_model_table1_shape():
     assert "gemm" in row
 
 
-def test_offload_analyzer_runs():
+def test_offload_analyzer_runs(tc):
     from repro.core.offload import analyze_arch_gemms
-    report = analyze_arch_gemms("llama3.2-1b", max_kernels=1)
+    report = analyze_arch_gemms("llama3.2-1b", max_kernels=1, toolchain=tc)
     assert report and report[0].II >= 1

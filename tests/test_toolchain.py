@@ -1,0 +1,163 @@
+"""Toolchain compile API: serializable CompiledKernel artifacts, the
+content-addressed mapping cache, fan-out compiles, and the deprecation
+shims for the old free-function flow."""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.kernels_lib import build_conv, build_gemm
+from repro.core.mapper import MapperOptions, map_kernel
+from repro.core.toolchain import (CACHE_ENV, CompiledKernel, Toolchain,
+                                  default_cache_dir, spec_cache_key)
+from repro.core.verify import verify_mapping
+
+
+def small_gemm():
+    return build_gemm(TI=4, TK=4, TJ=4, unroll=1)
+
+
+@pytest.fixture()
+def tc(tmp_path):
+    return Toolchain(options=MapperOptions(), cache_dir=str(tmp_path))
+
+
+# ----------------------------------------------------------------- compile
+def test_compile_produces_verified_artifact(tc):
+    ck = tc.compile(small_gemm())
+    assert ck.II >= ck.mii >= 1
+    assert not ck.from_cache
+    ck.verify()
+
+
+def test_compile_many_matches_individual(tc):
+    specs = [small_gemm(), build_conv(OH=5, OW=5, K=3, variant="base")]
+    cks = tc.compile_many(specs, jobs=2)
+    assert [ck.name for ck in cks] == [s.name for s in specs]
+    solo = Toolchain(cache_dir="")
+    for spec, ck in zip(specs, cks):
+        assert ck.II == solo.compile(spec).II
+    for ck in cks:
+        ck.verify()     # process-pool results reassemble into working CKs
+
+
+def test_compile_many_dedups_identical_specs(tc):
+    cks = tc.compile_many([small_gemm(), small_gemm()], jobs=2)
+    assert cks[0] is cks[1]     # one compile served both indices
+
+
+# ------------------------------------------------------------ serialization
+def test_json_roundtrip_verifies_bit_exactly(tc):
+    ck = tc.compile(small_gemm())
+    art = ck.to_json()
+    ck2 = CompiledKernel.from_json(art)
+    assert ck2.spec is None          # no closures travel with the artifact
+    ck2.verify(seed=3)               # DFG-reference oracle, bit-exact
+    # simulating the same inputs through both artifacts is bit-identical
+    init = ck.random_banks(seed=11)
+    a = ck.run({k: v.copy() for k, v in init.items()})
+    b = ck2.run({k: v.copy() for k, v in init.items()})
+    for k in a:
+        np.testing.assert_array_equal(a[k], b[k])
+    # and the re-serialized artifact is stable
+    assert json.loads(ck2.to_json()) == json.loads(art)
+
+
+def test_roundtrip_preserves_mapping_structure(tc):
+    ck = tc.compile(small_gemm())
+    ck2 = CompiledKernel.from_json(ck.to_json())
+    assert ck2.II == ck.II and ck2.mii == ck.mii
+    assert ck2.mapping.place == ck.mapping.place
+    assert ck2.mapping.reg_assign == ck.mapping.reg_assign
+    assert ck2.mapping.usage.map == ck.mapping.usage.map
+    assert ck2.options == ck.options
+    assert ck2.cache_key == ck.cache_key
+
+
+# ------------------------------------------------------------------- cache
+def test_cache_hit_skips_placement(tmp_path, monkeypatch):
+    cache = str(tmp_path)
+    ck = Toolchain(cache_dir=cache).compile(small_gemm())
+    assert not ck.from_cache
+
+    # a fresh Toolchain (empty memo) must satisfy the compile from disk
+    # without ever invoking the mapper
+    import repro.core.toolchain as toolchain_mod
+
+    def boom(*a, **k):
+        raise AssertionError("placement re-ran on a cache hit")
+
+    monkeypatch.setattr(toolchain_mod, "map_kernel_opts", boom)
+    ck2 = Toolchain(cache_dir=cache).compile(small_gemm())
+    assert ck2.from_cache
+    assert ck2.II == ck.II
+    assert ck2.cache_key == ck.cache_key
+    ck2.verify()                     # the cached artifact still verifies
+
+
+def test_memo_returns_same_object(tc):
+    a = tc.compile(small_gemm())
+    b = tc.compile(small_gemm())
+    assert a is b
+
+
+def test_cache_key_sensitivity():
+    opts = MapperOptions()
+    base = spec_cache_key(small_gemm(), opts)
+    assert base == spec_cache_key(small_gemm(), opts)  # deterministic
+    assert base != spec_cache_key(build_gemm(TI=4, TK=4, TJ=4, unroll=2),
+                                  opts)                 # DFG change
+    assert base != spec_cache_key(small_gemm(),
+                                  MapperOptions(ii_max=16))  # options change
+
+
+def test_corrupt_cache_entry_recompiles(tmp_path):
+    cache = str(tmp_path)
+    tc1 = Toolchain(cache_dir=cache)
+    ck = tc1.compile(small_gemm())
+    path = os.path.join(cache, f"{ck.cache_key}.json")
+    with open(path, "w") as f:
+        f.write("{not json")
+    ck2 = Toolchain(cache_dir=cache).compile(small_gemm())
+    assert not ck2.from_cache        # fell back to a cold compile
+    ck2.verify()
+
+
+def test_cache_disabled_with_empty_dir():
+    tc = Toolchain(cache_dir="")
+    ck = tc.compile(small_gemm())
+    assert not ck.from_cache
+    assert tc._cache_path(ck.cache_key) is None
+
+
+def test_cache_env_var_override(monkeypatch, tmp_path):
+    monkeypatch.setenv(CACHE_ENV, str(tmp_path / "envcache"))
+    assert default_cache_dir() == str(tmp_path / "envcache")
+    Toolchain().compile(small_gemm())
+    assert os.path.isdir(str(tmp_path / "envcache"))
+
+
+# ---------------------------------------------------------- legacy shims
+def test_deprecated_map_kernel_shim_still_works():
+    spec = small_gemm()
+    with pytest.warns(DeprecationWarning):
+        m = map_kernel(spec.dfg, spec.arch, spec.layout)
+    assert m.II >= m.mii
+
+
+def test_deprecated_verify_mapping_shim_still_works():
+    spec = small_gemm()
+    with pytest.warns(DeprecationWarning):
+        m = map_kernel(spec.dfg, spec.arch, spec.layout)
+    with pytest.warns(DeprecationWarning):
+        m2 = verify_mapping(spec, mapping=m)
+    assert m2.II == m.II
+
+
+def test_mapper_options_roundtrip():
+    opts = MapperOptions(ii_max=24, seeds=(5, 6), ii_start=4,
+                         time_budget_s=1.5)
+    assert MapperOptions.from_json_dict(opts.to_json_dict()) == opts
+    # seeds coerce to tuple so options hash/compare structurally
+    assert MapperOptions(seeds=[1, 2]) == MapperOptions(seeds=(1, 2))
