@@ -9,23 +9,57 @@
   toolchain_cache -- cold vs warm Toolchain.compile over the Table-I kernel
                      set (the content-addressed artifact cache)
 
-Prints ``name,us_per_call,derived`` CSV rows per benchmark.
+Each benchmark prints ``name,us_per_call,derived`` CSV rows *and* returns
+machine-readable rows; ``main`` writes one ``BENCH_<name>.json`` artifact
+per benchmark (schema: ``{"bench", "schema", "git_sha", "rows": [{"name",
+"us", "derived": {...}}]}``) so the perf trajectory is tracked PR-over-PR.
+
+CLI:  python -m benchmarks.run [--only sim_throughput,toolchain_cache]
+                               [--out DIR]
+The output directory defaults to ``$MORPHER_BENCH_DIR`` or the cwd.
 """
 from __future__ import annotations
 
+import argparse
+import json
+import os
 import shutil
+import subprocess
 import tempfile
 import time
+from typing import Dict, List, Optional
 
 import numpy as np
 
+BENCH_SCHEMA = 1
 
-def bench_table1() -> None:
+
+def _row(name: str, us: float, **derived) -> Dict:
+    return {"name": name, "us": round(us, 1), "derived": derived}
+
+
+def _print_rows(rows: List[Dict]) -> None:
+    for r in rows:
+        d = ";".join(f"{k}={v}" for k, v in r["derived"].items())
+        print(f"{r['name']},{r['us']:.0f},{d}")
+
+
+def _git_sha() -> Optional[str]:
+    try:
+        return subprocess.check_output(
+            ["git", "rev-parse", "HEAD"],
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            text=True, stderr=subprocess.DEVNULL).strip()
+    except (OSError, subprocess.CalledProcessError):
+        return None
+
+
+def bench_table1() -> List[Dict]:
     from . import table1
-    table1.main()
+    return table1.main()
 
 
-def bench_mapper_sweep() -> None:
+def bench_mapper_sweep() -> List[Dict]:
     from repro.core.adl import cluster_4x4
     from repro.core.kernels_lib import build_gemm
     from repro.core.mapper import MapError, MapperOptions
@@ -34,6 +68,7 @@ def bench_mapper_sweep() -> None:
     # use_cache=False: this benchmark measures real mapper search time
     tc = Toolchain(options=MapperOptions(ii_max=24, seeds=(0, 1, 2, 3),
                                          time_budget_s=60))
+    rows = []
     for rf in (4, 8, 16):
         for unroll in (1, 2, 4):
             arch = cluster_4x4(regfile=rf)
@@ -41,28 +76,32 @@ def bench_mapper_sweep() -> None:
             t0 = time.time()
             try:
                 ck = tc.compile(spec, use_cache=False)
-                print(f"mapper_rf{rf}_u{unroll},"
-                      f"{(time.time()-t0)*1e6:.0f},"
-                      f"II={ck.II};MII={ck.mii};util={ck.utilization:.3f}")
+                rows.append(_row(f"mapper_rf{rf}_u{unroll}",
+                                 (time.time() - t0) * 1e6, II=ck.II,
+                                 MII=ck.mii,
+                                 util=round(ck.utilization, 3)))
             except MapError:
-                print(f"mapper_rf{rf}_u{unroll},"
-                      f"{(time.time()-t0)*1e6:.0f},unmapped")
+                rows.append(_row(f"mapper_rf{rf}_u{unroll}",
+                                 (time.time() - t0) * 1e6, unmapped=1))
+    _print_rows(rows)
+    return rows
 
 
-def bench_kernel_micro() -> None:
+def bench_kernel_micro() -> List[Dict]:
     import jax.numpy as jnp
     from repro.kernels.gemm_os.ops import gemm_os
     from repro.kernels.decode_attn.ops import decode_attn
 
     rng = np.random.default_rng(0)
+    rows = []
     a = jnp.asarray(rng.normal(size=(256, 256)), jnp.float32)
     b = jnp.asarray(rng.normal(size=(256, 256)), jnp.float32)
     gemm_os(a, b, interpret=True).block_until_ready()
     t0 = time.time()
     for _ in range(3):
         gemm_os(a, b, interpret=True).block_until_ready()
-    print(f"gemm_os_256_interpret,{(time.time()-t0)/3*1e6:.0f},"
-          f"flops={2*256**3}")
+    rows.append(_row("gemm_os_256_interpret", (time.time() - t0) / 3 * 1e6,
+                     flops=2 * 256 ** 3))
 
     q = jnp.asarray(rng.normal(size=(2, 8, 64)), jnp.float32)
     kv = jnp.asarray(rng.normal(size=(2, 2, 512, 64)), jnp.float32)
@@ -72,10 +111,13 @@ def bench_kernel_micro() -> None:
     for _ in range(3):
         decode_attn(q, kv, kv, lens, bs=128,
                     interpret=True).block_until_ready()
-    print(f"decode_attn_interpret,{(time.time()-t0)/3*1e6:.0f},kv=512")
+    rows.append(_row("decode_attn_interpret", (time.time() - t0) / 3 * 1e6,
+                     kv=512))
+    _print_rows(rows)
+    return rows
 
 
-def bench_sim_throughput() -> None:
+def bench_sim_throughput() -> List[Dict]:
     from repro.core.kernels_lib import build_gemm
     from repro.core.toolchain import Toolchain
     from repro.core.verify import generate_test_data
@@ -85,14 +127,18 @@ def bench_sim_throughput() -> None:
     data = generate_test_data(spec)
     n_cycles = ck.cfg.n_cycles(spec.mapped_iters) * len(spec.invocations)
     ck.run(data.init_banks)
-    t0 = time.time()
-    ck.run(data.init_banks)
-    dt = time.time() - t0
-    print(f"simulator_gemm,{dt*1e6:.0f},cycles={n_cycles};"
-          f"cycles_per_s={n_cycles/dt:.0f}")
+    dt = float("inf")                 # best of 3: shields against noise
+    for _ in range(3):
+        t0 = time.time()
+        ck.run(data.init_banks)
+        dt = min(dt, time.time() - t0)
+    rows = [_row("simulator_gemm", dt * 1e6, cycles=n_cycles,
+                 cycles_per_s=round(n_cycles / dt))]
+    _print_rows(rows)
+    return rows
 
 
-def bench_toolchain_cache() -> None:
+def bench_toolchain_cache() -> List[Dict]:
     """Cold vs warm compile of the Table-I kernel set through the content-
     addressed artifact cache (small dims, identical DFG structure)."""
     from repro.core.kernels_lib import table1_kernels
@@ -114,24 +160,54 @@ def bench_toolchain_cache() -> None:
             list(table1_kernels(small=True).values()))
         warm = time.time() - t0
         assert all(ck.from_cache for ck in warm_cks)
-        print(f"toolchain_cache,{cold*1e6:.0f},"
-              f"warm_us={warm*1e6:.0f};kernels={len(specs)};"
-              f"speedup={cold/warm:.1f}x")
+        rows = [_row("toolchain_cache", cold * 1e6,
+                     warm_us=round(warm * 1e6), kernels=len(specs),
+                     speedup=round(cold / warm, 1))]
+        _print_rows(rows)
+        return rows
     finally:
         shutil.rmtree(cache, ignore_errors=True)
 
 
-def main() -> None:
-    print("# === Table I (paper reproduction) ===")
-    bench_table1()
-    print("# === mapper sweep (ADL design-space exploration) ===")
-    bench_mapper_sweep()
-    print("# === Pallas kernel micro (interpret mode) ===")
-    bench_kernel_micro()
-    print("# === simulator throughput ===")
-    bench_sim_throughput()
-    print("# === toolchain artifact cache (cold vs warm) ===")
-    bench_toolchain_cache()
+BENCHES = {
+    "table1": ("Table I (paper reproduction)", bench_table1),
+    "mapper_sweep": ("mapper sweep (ADL design-space exploration)",
+                     bench_mapper_sweep),
+    "kernel_micro": ("Pallas kernel micro (interpret mode)",
+                     bench_kernel_micro),
+    "sim_throughput": ("simulator throughput", bench_sim_throughput),
+    "toolchain_cache": ("toolchain artifact cache (cold vs warm)",
+                        bench_toolchain_cache),
+}
+
+
+def main(argv: Optional[List[str]] = None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--only", default=None,
+                    help="comma-separated benchmark names "
+                         f"(default: all of {', '.join(BENCHES)})")
+    ap.add_argument("--out", default=None,
+                    help="directory for BENCH_<name>.json artifacts "
+                         "(default: $MORPHER_BENCH_DIR or cwd)")
+    args = ap.parse_args(argv)
+    names = list(BENCHES) if not args.only else [
+        n.strip() for n in args.only.split(",") if n.strip()]
+    unknown = [n for n in names if n not in BENCHES]
+    if unknown:
+        ap.error(f"unknown benchmark(s): {', '.join(unknown)}")
+    out_dir = args.out or os.environ.get("MORPHER_BENCH_DIR") or "."
+    os.makedirs(out_dir, exist_ok=True)
+    sha = _git_sha()
+    for name in names:
+        title, fn = BENCHES[name]
+        print(f"# === {title} ===")
+        rows = fn()
+        path = os.path.join(out_dir, f"BENCH_{name}.json")
+        with open(path, "w", encoding="utf-8") as f:
+            json.dump({"bench": name, "schema": BENCH_SCHEMA,
+                       "git_sha": sha, "rows": rows}, f, indent=1)
+            f.write("\n")
+        print(f"# wrote {path}")
 
 
 if __name__ == "__main__":

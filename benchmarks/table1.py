@@ -99,16 +99,27 @@ def print_table(results: Dict[str, Optional[KernelCost]]) -> None:
               f"{p['util']:.1f}% {p['total']:.2f}ms {p['speedup']}x")
 
 
-def main() -> None:
+def main() -> list:
+    """Run + print the table; returns machine-readable benchmark rows
+    (same shape as the other ``benchmarks.run`` benchmarks)."""
     t0 = time.time()
     results = run()
     print_table(results)
+    rows = []
     for name, c in results.items():
-        if c is not None:
-            us = c.total_ms * 1e3
-            print(f"{name},{us:.1f},II={c.II};MII={c.mii};"
-                  f"util={c.utilization:.3f};speedup={c.speedup:.2f}")
+        if c is None:
+            rows.append({"name": name, "us": None,
+                         "derived": {"unmapped": 1}})
+            continue
+        us = c.total_ms * 1e3
+        rows.append({"name": name, "us": round(us, 1),
+                     "derived": {"II": c.II, "MII": c.mii,
+                                 "util": round(c.utilization, 4),
+                                 "speedup": round(c.speedup, 2)}})
+        print(f"{name},{us:.1f},II={c.II};MII={c.mii};"
+              f"util={c.utilization:.3f};speedup={c.speedup:.2f}")
     print(f"# table1 done in {time.time() - t0:.0f}s")
+    return rows
 
 
 if __name__ == "__main__":

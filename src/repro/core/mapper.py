@@ -19,8 +19,11 @@ MII = max(ResMII, RecMII):
 """
 from __future__ import annotations
 
+import json
 import random
 import warnings
+from collections import deque
+from concurrent.futures import TimeoutError as _FuturesTimeout
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Set, Tuple
 
@@ -28,6 +31,7 @@ from .adl import CGRAArch
 from .dfg import DFG, Node, Op, Operand, latency
 from .layout import DataLayout
 from .mrrg import F, R, Route, Usage, commit_route, release_route, route_value
+from .pool import reset_pool, submit_all
 
 
 # ----------------------------------------------------------------- options
@@ -280,13 +284,29 @@ def _sccs(dfg: DFG) -> List[List[int]]:
     return out
 
 
-def _priorities(dfg: DFG, rng: random.Random) -> List[int]:
-    """Recurrence-cycle nodes first (grouped per SCC, in dependence order),
-    then the acyclic remainder by DAG height."""
+@dataclass
+class _DFGInfo:
+    """Per-DFG search invariants, computed once per compile and shared by
+    every (II, seed) trial.  Everything here is II- and seed-independent;
+    hoisting it out of ``_try_map`` keeps the portfolio's per-trial cost to
+    the placement/routing search itself."""
+    edges: List[Tuple[int, int, int, int]]     # (src, dst, lat, dist)
+    cons: Dict[int, List[Tuple[int, int]]]     # consumers per node
+    height: Dict[int, int]                     # dist-0 DAG height
+    cyc_ids: List[int]                         # priority prefix (cycles)
+    rest: List[int]                            # acyclic ids, dfg.nodes order
+    self_loop: Set[int]                        # dist>0 self-loop sources
+    multi_cycle: Set[int]                      # members of len>1 SCCs
+    comps: List[List[int]]                     # len>1 SCCs
+    rank: List[int]                            # condensation longest-path
+    order_c: List[int]                         # comp placement order
+
+
+def _dfg_info(dfg: DFG) -> _DFGInfo:
     order = dfg.topo_order()
     topo_pos = {v: i for i, v in enumerate(order)}
-    height = {i: 0 for i in dfg.nodes}
     cons = dfg.consumers()
+    height = {i: 0 for i in dfg.nodes}
     for v in reversed(order):
         for c, _slot in cons[v]:
             if any(o.src == v and o.dist == 0 for o in dfg.nodes[c].operands):
@@ -294,26 +314,77 @@ def _priorities(dfg: DFG, rng: random.Random) -> List[int]:
 
     self_loop = {src for src, dst, _s, o in dfg.data_edges()
                  if src == dst and o.dist > 0}
-    cyc_comps = [c for c in _sccs(dfg)
+    sccs = _sccs(dfg)
+    cyc_comps = [c for c in sccs
                  if len(c) > 1 or (len(c) == 1 and c[0] in self_loop)]
     # tightest (largest) cycles first; members in dataflow order so each
     # node lands next to its already-placed cycle neighbours
     cyc_comps.sort(key=len, reverse=True)
-    ids: List[int] = []
+    cyc_ids: List[int] = []
     seen: Set[int] = set()
     for comp in cyc_comps:
         for v in sorted(comp, key=lambda v: topo_pos[v]):
-            ids.append(v)
+            cyc_ids.append(v)
             seen.add(v)
     rest = [i for i in dfg.nodes if i not in seen]
-    jitter = {i: rng.random() for i in rest}
-    rest.sort(key=lambda i: (-height[i], jitter[i]))
-    return ids + rest
+
+    comps = [c for c in sccs if len(c) > 1]
+    multi_cycle: Set[int] = set()
+    for c in comps:
+        multi_cycle.update(c)
+    # condensation DAG: comp A -> comp B if a dist-0 path (through glue
+    # nodes) leads from A into B; stagger start margins by longest-path
+    # rank so glue nodes keep non-empty windows between dependent comps.
+    comp_of: Dict[int, int] = {}
+    for ci, c in enumerate(comps):
+        for v in c:
+            comp_of[v] = ci
+    succ0: Dict[int, List[int]] = {i: [] for i in dfg.nodes}
+    for s, d, _sl, o in dfg.data_edges():
+        if o.dist == 0:
+            succ0[s].append(d)
+    comp_succ: Dict[int, Set[int]] = {ci: set() for ci in range(len(comps))}
+    for ci, c in enumerate(comps):
+        seen_n: Set[int] = set(c)
+        stack = [d for v in c for d in succ0[v] if d not in seen_n]
+        while stack:
+            v = stack.pop()
+            if v in seen_n:
+                continue
+            seen_n.add(v)
+            cj = comp_of.get(v)
+            if cj is not None and cj != ci:
+                comp_succ[ci].add(cj)
+                continue
+            stack.extend(succ0[v])
+    rank = [0] * len(comps)
+    for _ in range(len(comps) + 1):          # longest-path fixpoint
+        for ci in range(len(comps)):
+            for cj in comp_succ[ci]:
+                rank[cj] = max(rank[cj], rank[ci] + 1)
+    order_c = sorted(range(len(comps)), key=lambda ci: (rank[ci],
+                                                        -len(comps[ci])))
+    return _DFGInfo(edges=_edges_with_memdeps(dfg), cons=cons, height=height,
+                    cyc_ids=cyc_ids, rest=rest, self_loop=self_loop,
+                    multi_cycle=multi_cycle, comps=comps, rank=rank,
+                    order_c=order_c)
 
 
-def _asap(dfg: DFG, II: int) -> Dict[int, int]:
+def _priorities(info: _DFGInfo, rng: random.Random) -> List[int]:
+    """Recurrence-cycle nodes first (grouped per SCC, in dependence order),
+    then the acyclic remainder by DAG height (seed-jittered tie-break)."""
+    jitter = {i: rng.random() for i in info.rest}
+    height = info.height
+    rest = sorted(info.rest, key=lambda i: (-height[i], jitter[i]))
+    return info.cyc_ids + rest
+
+
+def _asap(dfg: DFG, II: int,
+          edges: Optional[List[Tuple[int, int, int, int]]] = None
+          ) -> Dict[int, int]:
     pot = {i: 0 for i in dfg.nodes}
-    edges = _edges_with_memdeps(dfg)
+    if edges is None:
+        edges = _edges_with_memdeps(dfg)
     for _ in range(len(pot) + 1):
         changed = False
         for src, dst, lat, dist in edges:
@@ -328,30 +399,30 @@ def _asap(dfg: DFG, II: int) -> Dict[int, int]:
 
 
 def _try_map(dfg: DFG, arch: CGRAArch, II: int, seed: int,
-             bank_of: Dict[int, int], window_factor: int = 3,
+             bank_of: Dict[int, int], info: Optional[_DFGInfo] = None,
+             asap: Optional[Dict[int, int]] = None, window_factor: int = 3,
              ripup_budget: int = 60) -> Optional[Tuple[Dict, Dict, Usage]]:
+    if info is None:
+        info = _dfg_info(dfg)
     rng = random.Random(seed)
-    order = _priorities(dfg, rng)
-    asap = _asap(dfg, II)
+    order = _priorities(info, rng)
+    if asap is None:
+        asap = _asap(dfg, II, info.edges)
     # recurrence cycles are internally rigid; start them late enough that
     # their feeder chains (which accrue routing hops beyond the latency-only
     # ASAP estimate) fit underneath.
-    self_loop = {src for src, dst, _s, o in dfg.data_edges()
-                 if src == dst and o.dist > 0}
-    multi_cycle: Set[int] = set()
-    for comp in _sccs(dfg):
-        if len(comp) > 1:
-            multi_cycle.update(comp)
     # induction-variable self-loops are chain *sources*: keep them early so
     # downstream feeders retain routing-drift slack; multi-node recurrences
     # (accumulators) are chain *sinks*: start them late enough for feeders.
-    cycle_nodes = multi_cycle | self_loop
+    multi_cycle = info.multi_cycle
+    cycle_nodes = multi_cycle | info.self_loop
     margin = II + 4
     self_margin = 1
     usage = Usage(arch, II)
+    dtab = usage.tables.dist
     place: Dict[int, Tuple[int, int]] = {}
     routes: Dict[Tuple[int, int, int], Route] = {}
-    cons = dfg.consumers()
+    cons = info.cons
 
     def node_claims(n: Node, pe: int, t: int) -> List:
         claims = [(("fu", pe, t % II), (n.id, t))]
@@ -436,6 +507,9 @@ def _try_map(dfg: DFG, arch: CGRAArch, II: int, seed: int,
                    if o.src in place and o.src != v]
         anchors += [place[c][0] for c, _ in cons[v] if c in place and c != v]
 
+        # the anchor-distance lower bound depends only on the PE, not the
+        # slot: one table-lookup sum per PE instead of one per candidate
+        lb_pe = {pe: sum(dtab[pe][a] for a in anchors) for pe in pes}
         cands = []
         for t in range(t_lo, t_hi + 1):
             # feeders of placed consumers want to sit close to them (long
@@ -443,8 +517,7 @@ def _try_map(dfg: DFG, arch: CGRAArch, II: int, seed: int,
             # no placed consumer prefer the earliest slot.
             tbias = 0.25 * ((t_hi - t) if succ_bound else (t - t_lo))
             for pe in pes:
-                lb = sum(arch.manhattan(pe, a) for a in anchors)
-                cands.append((lb + tbias + rng.random() * 0.1, t, pe))
+                cands.append((lb_pe[pe] + tbias + rng.random() * 0.1, t, pe))
         cands.sort()
 
         tried_routing = 0
@@ -525,7 +598,7 @@ def _try_map(dfg: DFG, arch: CGRAArch, II: int, seed: int,
         # through at most a couple of glue nodes)
         anchors = [pe for pe, _t in place.values()]
         if anchors:
-            pes.sort(key=lambda p: (sum(arch.manhattan(p, a)
+            pes.sort(key=lambda p: (sum(dtab[p][a]
                                         for a in anchors) / len(anchors)
                                     + rng.random()))
         else:
@@ -573,40 +646,8 @@ def _try_map(dfg: DFG, arch: CGRAArch, II: int, seed: int,
         return False
 
     joint_done: Set[int] = set()
-    comps = [c for c in _sccs(dfg) if len(c) > 1]
-    # condensation DAG: comp A -> comp B if a dist-0 path (through glue
-    # nodes) leads from A into B; stagger start margins by longest-path
-    # rank so glue nodes keep non-empty windows between dependent comps.
-    comp_of: Dict[int, int] = {}
-    for ci, c in enumerate(comps):
-        for v in c:
-            comp_of[v] = ci
-    succ0: Dict[int, List[int]] = {i: [] for i in dfg.nodes}
-    for s, d, _sl, o in dfg.data_edges():
-        if o.dist == 0:
-            succ0[s].append(d)
-    comp_succ: Dict[int, Set[int]] = {ci: set() for ci in range(len(comps))}
-    for ci, c in enumerate(comps):
-        seen_n: Set[int] = set(c)
-        stack = [d for v in c for d in succ0[v] if d not in seen_n]
-        while stack:
-            v = stack.pop()
-            if v in seen_n:
-                continue
-            seen_n.add(v)
-            cj = comp_of.get(v)
-            if cj is not None and cj != ci:
-                comp_succ[ci].add(cj)
-                continue
-            stack.extend(succ0[v])
-    rank = [0] * len(comps)
-    for _ in range(len(comps) + 1):          # longest-path fixpoint
-        for ci in range(len(comps)):
-            for cj in comp_succ[ci]:
-                rank[cj] = max(rank[cj], rank[ci] + 1)
-    order_c = sorted(range(len(comps)), key=lambda ci: (rank[ci],
-                                                        -len(comps[ci])))
-    for ci in order_c:
+    comps, rank = info.comps, info.rank
+    for ci in info.order_c:
         # routing drift accrues roughly linearly along the feeder chain:
         # scale each comp's start slack with its ASAP depth (plus the DAG
         # rank so sibling comps at equal depth still stagger).
@@ -616,10 +657,10 @@ def _try_map(dfg: DFG, arch: CGRAArch, II: int, seed: int,
             joint_done.update(comps[ci])
         # else: fall through to per-node placement for these nodes
 
-    pending = [v for v in order if v not in joint_done]
+    pending = deque(v for v in order if v not in joint_done)
     ripups = 0
     while pending:
-        v = pending.pop(0)
+        v = pending.popleft()
         if try_place(v):
             continue
         # rip-up: evict placed neighbours (and a random victim) and retry
@@ -641,7 +682,7 @@ def _try_map(dfg: DFG, arch: CGRAArch, II: int, seed: int,
             unplace(w)
         if not try_place(v):
             # place v first in an emptier context next round
-            pending.insert(0, v)
+            pending.appendleft(v)
         pending.extend(sorted(vic))
     return place, routes, usage
 
@@ -713,49 +754,167 @@ def _assign_liregs(arch: CGRAArch, dfg: DFG,
     return out
 
 
+def _portfolio_worker(payload: str) -> Optional[str]:
+    """Process-pool worker for one (II, seed) trial.  Returns the mapping's
+    canonical JSON dict (the exact bytes the sequential path would have
+    serialized) or None when the trial is infeasible."""
+    d = json.loads(payload)
+    arch = CGRAArch.from_json(json.dumps(d["arch"]))
+    dfg = DFG.from_json_dict(d["dfg"])
+    bank_of = {v: b for v, b in d["bank_of"]}
+    II, seed = d["II"], d["seed"]
+    got = _try_map(dfg, arch, II, seed, bank_of)
+    if got is None:
+        return None
+    place, routes, usage = got
+    regs = _color_registers(arch, II, routes)
+    if regs is None:
+        return None
+    mapping = Mapping(dfg=dfg, arch=arch, II=II, mii=d["mii"],
+                      mii_parts=d["mii_parts"], place=place, routes=routes,
+                      usage=usage, reg_assign=regs,
+                      lireg_assign=_assign_liregs(arch, dfg, place),
+                      bank_of=bank_of)
+    return json.dumps(mapping.to_json_dict())
+
+
 def map_kernel_opts(dfg: DFG, arch: CGRAArch, layout: DataLayout,
-                    options: Optional[MapperOptions] = None) -> Mapping:
+                    options: Optional[MapperOptions] = None, *,
+                    portfolio: Optional[bool] = None) -> Mapping:
     """Map a DFG onto the CGRA: returns the first feasible Mapping,
     escalating II from MII (DRESC/Morpher semantics).
+
+    Search runs as a *portfolio* over the candidate seeds of each II: the
+    first seed runs in-process (the common fast path) while the remaining
+    seeds race on the shared worker pool.  Selection is deterministic —
+    the lowest feasible II wins, ties broken by the earliest seed in
+    ``options.seeds`` order — so the result is bit-identical to the
+    sequential search, which also serves as the fallback whenever process
+    fan-out is unavailable (single core, nested workers, REPL drivers).
+    ``portfolio=False`` (or ``MORPHER_PORTFOLIO=0``) forces sequential.
 
     This is the canonical mapper entry point; search limits come from one
     :class:`MapperOptions`.  Prefer `repro.core.toolchain.Toolchain.compile`
     which adds configuration generation and artifact caching on top.
     """
+    import os as _os
     import time as _time
     opt = options or MapperOptions()
     deadline = _time.time() + opt.time_budget_s if opt.time_budget_s else None
     dfg.validate()
     bank_of = _bank_of_nodes(dfg, layout)
     mii, parts = compute_mii(dfg, arch, bank_of)
+    info = _dfg_info(dfg)
     start = max(mii, opt.ii_start or 0)
+    # portfolio=True races unconditionally; auto mode races a round only
+    # when its in-process seed-0 trial was expensive enough to amortize
+    # the worker dispatch (cheap trials finish sequentially faster)
+    force_pool = portfolio is True
+    if portfolio is None:
+        portfolio = _os.environ.get("MORPHER_PORTFOLIO", "1") != "0"
+    use_pool = portfolio and len(opt.seeds) > 1
+    min_trial_s = float(_os.environ.get("MORPHER_PORTFOLIO_MIN_TRIAL_S",
+                                        "0.2"))
+
+    def budget_left() -> Optional[float]:
+        if deadline is None:
+            return None
+        left = deadline - _time.time()
+        if left <= 0:
+            raise MapError(f"{dfg.name}: time budget exhausted at "
+                           f"II={II} (MII={mii})")
+        return left
+
+    def attempt(II: int, seed: int, asap: Dict[int, int]
+                ) -> Optional[Mapping]:
+        got = _try_map(dfg, arch, II, seed, bank_of, info, asap)
+        if got is None:
+            return None
+        place, routes, usage = got
+        regs = _color_registers(arch, II, routes)
+        if regs is None:
+            return None
+        return Mapping(dfg=dfg, arch=arch, II=II, mii=mii,
+                       mii_parts=parts, place=place, routes=routes,
+                       usage=usage, reg_assign=regs,
+                       lireg_assign=_assign_liregs(arch, dfg, place),
+                       bank_of=bank_of)
+
+    base_payload = None
+    seeds = opt.seeds
     for II in range(start, opt.ii_max + 1):
-        for seed in opt.seeds:
-            if deadline and _time.time() > deadline:
-                raise MapError(f"{dfg.name}: time budget exhausted at "
-                               f"II={II} (MII={mii})")
-            got = _try_map(dfg, arch, II, seed, bank_of)
-            if got is None:
-                continue
-            place, routes, usage = got
-            regs = _color_registers(arch, II, routes)
-            if regs is None:
-                continue
-            liregs = _assign_liregs(arch, dfg, place)
-            return Mapping(dfg=dfg, arch=arch, II=II, mii=mii,
-                           mii_parts=parts, place=place, routes=routes,
-                           usage=usage, reg_assign=regs,
-                           lireg_assign=liregs, bank_of=bank_of)
+        if not seeds:                          # degenerate options: no
+            continue                           # trials, MapError below
+        asap = _asap(dfg, II, info.edges)
+        # the first seed always runs in-process: when it succeeds (the
+        # common case) the compile pays zero fan-out overhead
+        budget_left()
+        t_trial = _time.time()
+        m = attempt(II, seeds[0], asap)
+        if m is not None:
+            return m
+        trial_cost = _time.time() - t_trial
+        futs = None
+        if use_pool and (force_pool or trial_cost >= min_trial_s):
+            if base_payload is None:
+                base_payload = {"dfg": dfg.to_json_dict(),
+                                "arch": json.loads(arch.to_json()),
+                                "bank_of": sorted(bank_of.items()),
+                                "mii": mii, "mii_parts": parts}
+            futs = submit_all(_portfolio_worker, [
+                json.dumps({**base_payload, "II": II, "seed": s})
+                for s in seeds[1:]])
+        if futs is None:                       # sequential search
+            for seed in seeds[1:]:
+                budget_left()
+                m = attempt(II, seed, asap)
+                if m is not None:
+                    return m
+            continue
+        # the remaining seeds race on the pool; consume results in seeds
+        # order so the winner matches the sequential search
+        try:
+            for f, seed in zip(futs, seeds[1:]):
+                out = f.result(timeout=budget_left())
+                if out is not None:
+                    m = Mapping.from_json_dict(json.loads(out), dfg, arch)
+                    break
+        except MapError:
+            for f in futs:
+                f.cancel()
+            raise
+        except (_FuturesTimeout, TimeoutError):
+            for f in futs:
+                f.cancel()
+            raise MapError(f"{dfg.name}: time budget exhausted at "
+                           f"II={II} (MII={mii})")
+        except Exception:
+            # broken pool / worker crash: finish this II sequentially
+            # (seeds[0] already ran in-process) and drop back to the
+            # sequential path for the remaining IIs
+            reset_pool()
+            use_pool = False
+            for seed in seeds[1:]:
+                budget_left()
+                m = attempt(II, seed, asap)
+                if m is not None:
+                    return m
+            continue
+        for f in futs:
+            f.cancel()
+        if m is not None:
+            return m
     raise MapError(f"{dfg.name}: no mapping found with II <= {opt.ii_max} "
                    f"(MII={mii}, parts={parts})")
 
 
 def map_kernel(dfg: DFG, arch: CGRAArch, layout: DataLayout,
-               ii_max: int = 64, seeds: Sequence[int] = (0, 1, 2, 3),
+               ii_max: int = 32, seeds: Sequence[int] = (0, 1, 2, 3),
                ii_start: Optional[int] = None,
                time_budget_s: Optional[float] = None) -> Mapping:
     """Deprecated shim — use ``Toolchain.compile(spec)`` (or, for a bare
-    DFG, :func:`map_kernel_opts` with a :class:`MapperOptions`)."""
+    DFG, :func:`map_kernel_opts` with a :class:`MapperOptions`).  Defaults
+    mirror :class:`MapperOptions` exactly (``ii_max=32``)."""
     warnings.warn(
         "map_kernel(dfg, arch, layout, ii_max=..., ...) is deprecated; "
         "use repro.core.toolchain.Toolchain.compile(spec) or "

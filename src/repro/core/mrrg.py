@@ -22,187 +22,17 @@ Values travel through the time-extended graph via two state kinds:
              from an inbound crossbar wire — ephemeral, 1 cycle only.
   R (reg):   resident in the PE's register file (held <= II consecutive
              cycles so the periodic schedule stays single-register).
+
+This module is the typed façade over the packed implementation in
+``router.py``: resource keys stay the tuples above at the API surface, but
+occupancy and the BFS run over flat integer ids (see the router module for
+the packing scheme).  Route production is bit-identical to the historical
+dict-of-tuples router.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Set, Tuple
+from .router import (F, Inst, Key, R, Route, RouterTables, Usage,
+                     commit_route, release_route, route_value, router_tables)
 
-from .adl import CGRAArch, DIRS, OPP
-
-Key = Tuple
-Inst = Tuple[int, int]   # (value_id, abs_time) — or (name, -1) for liregs
-
-F, R = 0, 1   # state kinds
-
-
-class Usage:
-    """Resource usage map with value-instance dedup."""
-
-    def __init__(self, arch: CGRAArch, II: int):
-        self.arch = arch
-        self.II = II
-        self.map: Dict[Key, Set[Inst]] = {}
-
-    def cap(self, key: Key) -> int:
-        k = key[0]
-        if k in ("fu", "fuout", "xo", "bank"):
-            return 1
-        if k == "regpool":
-            return self.arch.regfile_size
-        if k == "wr":
-            return self.arch.rf_write_ports
-        if k == "lireg":
-            return self.arch.livein_regs
-        raise KeyError(key)
-
-    def entries(self, key: Key) -> Set[Inst]:
-        return self.map.get(key, set())
-
-    def free_for(self, key: Key, inst: Inst) -> bool:
-        """True if ``inst`` may occupy ``key`` (already present == free)."""
-        cur = self.map.get(key)
-        if cur is None:
-            return True
-        if inst in cur:
-            return True
-        # same value at a different absolute time aliasing this modulo slot
-        # would be a second live copy of a periodic value: reject outright
-        # for capacity-1 resources, count separately for pools.
-        return len(cur) < self.cap(key)
-
-    def has(self, key: Key, inst: Inst) -> bool:
-        return inst in self.map.get(key, set())
-
-    def add(self, key: Key, inst: Inst) -> None:
-        self.map.setdefault(key, set()).add(inst)
-
-    def remove(self, key: Key, inst: Inst) -> None:
-        s = self.map.get(key)
-        if s is not None:
-            s.discard(inst)
-            if not s:
-                del self.map[key]
-
-    def clone_shallow(self) -> "Usage":
-        u = Usage(self.arch, self.II)
-        u.map = {k: set(v) for k, v in self.map.items()}
-        return u
-
-
-@dataclass
-class Route:
-    """A routed data edge: value ``value`` travels from its production
-    (src_pe, t_src) to consumption (dst_pe, t_dst)."""
-    value: int
-    src_pe: int
-    t_src: int
-    dst_pe: int
-    t_dst: int
-    # states visited: (kind, pe, t); steps[0] is the source, steps[-1] the
-    # state the consumer reads from at t_dst.
-    steps: List[Tuple[int, int, int]] = field(default_factory=list)
-    # resource claims made for this route (excluding dedup-shared ones)
-    uses: List[Tuple[Key, Inst]] = field(default_factory=list)
-
-    @property
-    def final_kind(self) -> int:
-        return self.steps[-1][0]
-
-
-def route_value(usage: Usage, arch: CGRAArch, II: int, value: int,
-                src_pe: int, t_src: int, dst_pe: int, t_dst: int
-                ) -> Optional[Route]:
-    """Time-layered BFS over the routing graph.  All transitions advance
-    one cycle, so every feasible route has identical cost — a forward
-    frontier sweep from t_src to t_dst finds one if it exists.  Resources
-    already carrying this exact value instance are reusable for free
-    (fan-out sharing).  Register holds are explored before hops (they
-    conserve crossbar bandwidth)."""
-    if t_dst < t_src:
-        return None
-    if t_dst == t_src:
-        if src_pe != dst_pe:
-            return None
-        return Route(value, src_pe, t_src, dst_pe, t_dst,
-                     steps=[(F, src_pe, t_src)], uses=[])
-
-    def usable(key: Key, inst: Inst) -> bool:
-        return usage.has(key, inst) or usage.free_for(key, inst)
-
-    # state within a layer: (kind, pe, hold)
-    start = (F, src_pe, 0)
-    parent: Dict[Tuple[int, Tuple], Tuple[Optional[Tuple], Tuple]] = {
-        (t_src, start): (None, ())}
-    frontier = [start]
-    for t in range(t_src, t_dst):
-        nxt: List[Tuple] = []
-        seen: set = set()
-        for st in frontier:
-            kind, pe, hold = st
-            # 1) hold in the register file (preferred: no wire pressure)
-            nh = 1 if kind == F else hold + 1
-            if nh <= II:
-                nst = (R, pe, nh)
-                if nst not in seen:
-                    pool = (("regpool", pe, (t + 1) % II), (value, t + 1))
-                    claims = [pool]
-                    ok = usable(*pool)
-                    if ok and kind == F:
-                        wr = (("wr", pe, t % II), (value, t))
-                        ok = usable(*wr)
-                        claims.append(wr)
-                    if ok:
-                        seen.add(nst)
-                        parent[(t + 1, nst)] = ((t, st), tuple(claims))
-                        nxt.append(nst)
-            # 2) crossbar hops
-            for di, dname in enumerate(DIRS):
-                q = arch.neighbor(pe, dname)
-                if q is None:
-                    continue
-                nst = (F, q, 0)
-                if nst in seen:
-                    continue
-                key = ("xo", pe, di, t % II)
-                inst = (value, t)
-                if usable(key, inst):
-                    seen.add(nst)
-                    parent[(t + 1, nst)] = ((t, st), ((key, inst),))
-                    nxt.append(nst)
-        if not nxt:
-            return None
-        frontier = nxt
-
-    goal = None
-    for st in frontier:
-        if st[1] == dst_pe:
-            goal = (t_dst, st)
-            break
-    if goal is None:
-        return None
-
-    steps: List[Tuple[int, int, int]] = []
-    uses: List[Tuple[Key, Inst]] = []
-    cur: Optional[Tuple[int, Tuple]] = goal
-    while cur is not None:
-        t, st = cur
-        steps.append((st[0], st[1], t))
-        prev, claims = parent[cur]
-        for key, inst in claims:
-            if not usage.has(key, inst):
-                uses.append((key, inst))
-        cur = prev
-    steps.reverse()
-    uses.reverse()
-    return Route(value, src_pe, t_src, dst_pe, t_dst, steps=steps, uses=uses)
-
-
-def commit_route(usage: Usage, route: Route) -> None:
-    for key, inst in route.uses:
-        usage.add(key, inst)
-
-
-def release_route(usage: Usage, route: Route) -> None:
-    for key, inst in route.uses:
-        usage.remove(key, inst)
+__all__ = ["F", "R", "Key", "Inst", "Route", "RouterTables", "Usage",
+           "commit_route", "release_route", "route_value", "router_tables"]

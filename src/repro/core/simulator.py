@@ -38,6 +38,7 @@ from .dfg import Op
 _OPP_IDX = np.array([2, 3, 0, 1], dtype=np.int32)
 
 
+
 def _wrap(x: jnp.ndarray, bits: int) -> jnp.ndarray:
     half = 1 << (bits - 1)
     full = 1 << bits
@@ -71,6 +72,18 @@ def _as_jnp(cfg: SimConfig) -> Dict[str, jnp.ndarray]:
         "valid_start", "nbr_idx")}
 
 
+# configuration planes indexed by the II slot; pre-tiled to cycle streams
+# before the scan so the traced body does no `[t % II]` dynamic gathers
+_SLOT_PLANES = ("op", "imm", "src_kind", "src_idx", "force_before",
+                "force_val", "xo_kind", "xo_idx", "rf_kind", "rf_idx",
+                "mem_off", "mem_words", "valid_start")
+
+# pre-tiling cap: beyond ~this many n_cycles*P elements per plane the tiled
+# streams would dominate memory (tens of MB), so long simulations fall back
+# to the per-cycle slot gather (identical numerics, O(II) config memory)
+_TILE_CYCLE_LIMIT = 1 << 20
+
+
 @functools.partial(jax.jit, static_argnames=("II", "P", "RF", "bits",
                                              "n_iters", "n_cycles",
                                              "scratch"))
@@ -81,6 +94,22 @@ def _run_invocations(c: Dict[str, jnp.ndarray], mem0: jnp.ndarray,
     opp = jnp.asarray(_OPP_IDX)
     pe_ar = jnp.arange(P)
 
+    # pre-tile the per-slot configuration into per-cycle streams: the scan
+    # consumes them as xs, so XLA sees static slot schedules instead of a
+    # dynamic `cfg[t % II]` gather inside every traced cycle (the gather
+    # defeats scan-level constant propagation and costs a fused lookup per
+    # cycle per plane).  One gather per plane here, outside the loop.
+    # Tiling is O(n_cycles) memory, so very long simulations (bounded by
+    # _TILE_CYCLE_LIMIT total cycle-plane elements) keep the II-sized
+    # planes and gather per cycle instead.
+    pretile = n_cycles * P <= _TILE_CYCLE_LIMIT
+    t_arr = jnp.arange(n_cycles)
+    if pretile:
+        slots = jnp.arange(n_cycles) % II
+        xs_cfg = {k: c[k][slots] for k in _SLOT_PLANES}
+    else:
+        xs_cfg = {}
+
     def one_invocation(mem: jnp.ndarray, li: jnp.ndarray) -> Tuple[jnp.ndarray, int]:
         regs0 = jnp.zeros((P, RF), dtype=jnp.int32)
         xo0 = jnp.zeros((P, 4), dtype=jnp.int32)
@@ -88,43 +117,45 @@ def _run_invocations(c: Dict[str, jnp.ndarray], mem0: jnp.ndarray,
         ldp0 = jnp.zeros((P,), dtype=jnp.int32)
         fl0 = jnp.zeros((P,), dtype=bool)
 
-        def cycle(carry, t):
+        def cycle(carry, xs):
             regs, xo, fu, ldp, fl, mem = carry
-            slot = t % II
-            opc = c["op"][slot]
+            t, ct = xs
+            if not pretile:
+                slot = t % II
+                ct = {k: c[k][slot] for k in _SLOT_PLANES}
+            opc = ct["op"]
             # inbound wires: what my neighbour's opposite-facing port holds
             inp = xo[c["nbr_idx"], opp[None, :]]          # [P,4]
 
             def resolve(kind, idx):
-                v = jnp.zeros((P,), dtype=jnp.int32)
-                v = jnp.where(kind == KIND_IN_N, inp[:, 0], v)
-                v = jnp.where(kind == KIND_IN_E, inp[:, 1], v)
-                v = jnp.where(kind == KIND_IN_S, inp[:, 2], v)
-                v = jnp.where(kind == KIND_IN_W, inp[:, 3], v)
+                # kind/idx: [P, K] — all K mux ports of a bank resolve in
+                # one broadcasted select chain instead of one chain per port
+                v = jnp.zeros(kind.shape, dtype=jnp.int32)
+                v = jnp.where(kind == KIND_IN_N, inp[:, 0:1], v)
+                v = jnp.where(kind == KIND_IN_E, inp[:, 1:2], v)
+                v = jnp.where(kind == KIND_IN_S, inp[:, 2:3], v)
+                v = jnp.where(kind == KIND_IN_W, inp[:, 3:4], v)
                 v = jnp.where(kind == KIND_REG,
-                              regs[pe_ar, jnp.clip(idx, 0, RF - 1)], v)
-                v = jnp.where(kind == KIND_FUOUT, fu, v)
-                v = jnp.where(kind == KIND_IMM, c["imm"][slot], v)
+                              regs[pe_ar[:, None], jnp.clip(idx, 0, RF - 1)],
+                              v)
+                v = jnp.where(kind == KIND_FUOUT, fu[:, None], v)
+                v = jnp.where(kind == KIND_IMM, ct["imm"][:, None], v)
                 v = jnp.where(kind == KIND_LIREG,
-                              li[pe_ar, jnp.clip(idx, 0, li.shape[1] - 1)], v)
+                              li[pe_ar[:, None],
+                                 jnp.clip(idx, 0, li.shape[1] - 1)], v)
                 return v
 
-            def operand(port):
-                v = resolve(c["src_kind"][slot, :, port],
-                            c["src_idx"][slot, :, port])
-                fb = c["force_before"][slot, :, port]
-                return jnp.where(t < fb, c["force_val"][slot, :, port], v)
-
-            a, b, p3 = operand(0), operand(1), operand(2)
+            ops = resolve(ct["src_kind"], ct["src_idx"])       # [P,3]
+            ops = jnp.where(t < ct["force_before"], ct["force_val"], ops)
+            a, b, p3 = ops[:, 0], ops[:, 1], ops[:, 2]
             res = _alu(opc, a, b, p3, bits)
 
             # memory
-            gaddr = c["mem_off"][slot] + jnp.clip(a, 0,
-                                                  c["mem_words"][slot] - 1)
+            gaddr = ct["mem_off"] + jnp.clip(a, 0, ct["mem_words"] - 1)
             loaded = jnp.take(mem, gaddr)
             is_load = opc == OPC_LOAD
             is_store = opc == OPC_STORE
-            vstart = c["valid_start"][slot]
+            vstart = ct["valid_start"]
             gate = is_store & (t >= vstart) & (t < vstart + n_iters * II)
             st_addr = jnp.where(gate, gaddr, scratch)
             mem = mem.at[st_addr].set(jnp.where(gate, b, mem[scratch]))
@@ -135,24 +166,17 @@ def _run_invocations(c: Dict[str, jnp.ndarray], mem0: jnp.ndarray,
             ldp_next = jnp.where(is_load, loaded, ldp)
             fl_next = is_load
 
-            def write_bank(vals, kinds, idxs, old):
-                # vals written from the same start-of-cycle snapshot
-                new = resolve(kinds, idxs)
-                return jnp.where(kinds != KIND_NONE, new, old)
-
-            regs_next = jnp.stack(
-                [write_bank(None, c["rf_kind"][slot, :, r],
-                            c["rf_idx"][slot, :, r], regs[:, r])
-                 for r in range(RF)], axis=1)
-            xo_next = jnp.stack(
-                [write_bank(None, c["xo_kind"][slot, :, d],
-                            c["xo_idx"][slot, :, d], xo[:, d])
-                 for d in range(4)], axis=1)
+            # register-file and crossbar writes, each bank resolved as one
+            # [P, K] select from the same start-of-cycle snapshot
+            regs_next = jnp.where(ct["rf_kind"] != KIND_NONE,
+                                  resolve(ct["rf_kind"], ct["rf_idx"]), regs)
+            xo_next = jnp.where(ct["xo_kind"] != KIND_NONE,
+                                resolve(ct["xo_kind"], ct["xo_idx"]), xo)
 
             return (regs_next, xo_next, fu_next, ldp_next, fl_next, mem), 0
 
         carry = (regs0, xo0, fu0, ldp0, fl0, mem)
-        carry, _ = jax.lax.scan(cycle, carry, jnp.arange(n_cycles))
+        carry, _ = jax.lax.scan(cycle, carry, (t_arr, xs_cfg))
         return carry[-1], 0
 
     mem, _ = jax.lax.scan(one_invocation, mem0, li_stack)

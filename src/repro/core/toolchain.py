@@ -31,13 +31,9 @@ from __future__ import annotations
 
 import hashlib
 import json
-import multiprocessing
 import os
-import sys
 import tempfile
 import threading
-from concurrent.futures import ProcessPoolExecutor
-from concurrent.futures.process import BrokenProcessPool
 from dataclasses import dataclass
 from typing import Dict, Iterable, List, Optional
 
@@ -49,6 +45,7 @@ from .dfg import DFG
 from .kernels_lib import KernelSpec
 from .layout import DataLayout
 from .mapper import Mapping, MapperOptions, map_kernel_opts
+from .pool import process_map
 
 ARTIFACT_VERSION = 1
 CACHE_ENV = "MORPHER_CACHE_DIR"
@@ -380,32 +377,17 @@ class Toolchain:
         if jobs is None:
             jobs = min(len(todo), os.cpu_count() or 1) or 1
         order = list(todo.items())
-        # worker processes re-import the caller's __main__; if it is not a
-        # real file (REPL/stdin scripts have __file__='<stdin>'), they would
-        # crash on startup — compile sequentially instead
-        main_file = getattr(sys.modules.get("__main__"), "__file__", None)
-        spawnable_main = main_file is None or os.path.exists(main_file)
-        if len(order) > 1 and jobs > 1 and spawnable_main:
+        if len(order) > 1 and jobs > 1:
             payloads = [json.dumps({
                 "dfg": specs[idxs[0]].dfg.to_json_dict(),
                 "arch": json.loads(specs[idxs[0]].arch.to_json()),
                 "layout": specs[idxs[0]].layout.to_json_dict(),
                 "options": opt.to_json_dict(),
             }) for _key, idxs in order]
-            # not fork: the parent often has JAX (multithreaded) loaded and
-            # forking a threaded process can deadlock.  forkserver exec's a
-            # clean server and does not re-import the caller's __main__ per
-            # task (spawn does, which breaks REPL/stdin drivers); workers
-            # only need the pure-numpy mapper import chain.
-            methods = multiprocessing.get_all_start_methods()
-            method = "forkserver" if "forkserver" in methods else "spawn"
-            try:
-                with ProcessPoolExecutor(
-                        max_workers=jobs,
-                        mp_context=multiprocessing.get_context(method)) as ex:
-                    outs = list(ex.map(_compile_worker, payloads))
-            except (OSError, PermissionError, BrokenProcessPool):
-                outs = None  # no process pool available: go sequential
+            # the shared pool handles start-method selection (forkserver
+            # over fork/spawn), REPL-driver detection, and nested-worker
+            # suppression; None means no fan-out here — go sequential
+            outs = process_map(_compile_worker, payloads, jobs=jobs)
             if outs is not None:
                 for (key, idxs), out in zip(order, outs):
                     d = json.loads(out)

@@ -1,12 +1,16 @@
-"""Mapper: MII math, mapping feasibility, and schedule/resource invariants
-(property-checked over the produced mapping).  Mappings are produced
-through the Toolchain compile API (disk cache disabled for hermeticity)."""
+"""Mapper: MII math, mapping feasibility, schedule/resource invariants
+(property-checked over the produced mapping), and the portfolio-search
+determinism contract.  Mappings are produced through the Toolchain compile
+API (disk cache disabled for hermeticity)."""
+import json
+
 import pytest
 
 from repro.core.adl import cluster_4x4
 from repro.core.dfg import latency
 from repro.core.kernels_lib import build_conv, build_gemm
-from repro.core.mapper import Mapping, compute_mii, _bank_of_nodes, rec_mii
+from repro.core.mapper import (Mapping, MapperOptions, compute_mii,
+                               _bank_of_nodes, map_kernel_opts, rec_mii)
 from repro.core.toolchain import Toolchain
 
 
@@ -90,3 +94,26 @@ def test_conv_maps():
     spec = build_conv(OH=5, OW=5, K=3, variant="base")
     ck = Toolchain(cache_dir="").compile(spec)
     assert ck.II == 4  # paper: CONV II=4 (MII 4)
+
+
+# ------------------------------------------------- portfolio determinism
+@pytest.mark.parametrize("regfile", [4, 8])
+def test_portfolio_search_is_bit_identical_to_sequential(regfile):
+    """The portfolio (II, seed) race selects the lowest II, ties broken by
+    the earliest seed in MapperOptions.seeds order — i.e. exactly the
+    mapping the sequential search produces, byte for byte.  unroll=2 is a
+    case where the first seeds fail, so the raced workers actually decide
+    the outcome when process fan-out is available."""
+    from repro.core.pool import shared_pool
+    if shared_pool() is None:
+        pytest.skip("process fan-out unavailable: portfolio would fall "
+                    "back to the sequential path and the comparison "
+                    "would be vacuous")
+    spec = build_gemm(TI=6, TK=8, TJ=6, unroll=2,
+                      arch=cluster_4x4(regfile=regfile))
+    opts = MapperOptions(ii_max=24)
+    seq = map_kernel_opts(spec.dfg, spec.arch, spec.layout, opts,
+                          portfolio=False)
+    par = map_kernel_opts(spec.dfg, spec.arch, spec.layout, opts,
+                          portfolio=True)
+    assert json.dumps(seq.to_json_dict()) == json.dumps(par.to_json_dict())

@@ -1,0 +1,128 @@
+"""Packed MRRG router: Usage occupancy semantics over the flat-integer
+key space, and routing behavior (fan-out sharing, capacity, holds)."""
+import pytest
+
+from repro.core.adl import cluster_4x4
+from repro.core.mrrg import (F, R, Usage, commit_route, release_route,
+                             route_value, router_tables)
+
+
+@pytest.fixture()
+def arch():
+    return cluster_4x4()
+
+
+# ------------------------------------------------------------------- Usage
+def test_pack_is_bijective_over_the_resource_space(arch):
+    II = 3
+    T = router_tables(arch, II)
+    keys = []
+    for pe in range(arch.n_pes):
+        keys.append(("lireg", pe))
+        for s in range(II):
+            keys += [("fu", pe, s), ("fuout", pe, s),
+                     ("regpool", pe, s), ("wr", pe, s)]
+            keys += [("xo", pe, d, s) for d in range(4)]
+    for b in range(len(arch.banks)):
+        keys += [("bank", b, s) for s in range(II)]
+    packed = [T.pack(k) for k in keys]
+    assert len(set(packed)) == len(packed)
+    assert all(0 <= p < T.n_resources for p in packed)
+
+
+def test_entries_returns_fresh_set(arch):
+    u = Usage(arch, 4)
+    key = ("fu", 3, 1)
+    u.add(key, (7, 5))
+    got = u.entries(key)
+    assert got == {(7, 5)}
+    got.add((9, 9))          # caller-side mutation must not leak back
+    assert u.entries(key) == {(7, 5)}
+    # the empty default is equally isolated (regression: the historical
+    # implementation handed out a shared mutable default)
+    empty = u.entries(("fu", 0, 0))
+    assert empty == set()
+    empty.add((1, 1))
+    assert u.entries(("fu", 0, 0)) == set()
+    assert not u.has(("fu", 0, 0), (1, 1))
+
+
+def test_map_view_uses_typed_keys(arch):
+    u = Usage(arch, 4)
+    u.add(("xo", 1, 2, 3), (5, 11))
+    u.add(("lireg", 2), ("n0", -1))     # string instances stay supported
+    assert u.map == {("xo", 1, 2, 3): {(5, 11)},
+                     ("lireg", 2): {("n0", -1)}}
+    u.remove(("xo", 1, 2, 3), (5, 11))
+    assert ("xo", 1, 2, 3) not in u.map
+    assert u.map == {("lireg", 2): {("n0", -1)}}
+
+
+def test_free_for_fanout_sharing_and_capacity(arch):
+    u = Usage(arch, 4)
+    key = ("xo", 0, 1, 2)
+    u.add(key, (5, 6))
+    assert u.free_for(key, (5, 6))       # same value instance: free share
+    assert not u.free_for(key, (5, 10))  # same value, second live copy
+    assert not u.free_for(key, (8, 6))   # other value: capacity 1
+    pool = ("regpool", 0, 1)
+    for i in range(arch.regfile_size):
+        assert u.free_for(pool, (i, 1))
+        u.add(pool, (i, 1))
+    assert not u.free_for(pool, (99, 1))  # pool capacity R exhausted
+
+
+def test_clone_shallow_is_isolated(arch):
+    u = Usage(arch, 4)
+    u.add(("fu", 1, 1), (3, 1))
+    v = u.clone_shallow()
+    v.add(("fu", 2, 2), (4, 5))
+    v.remove(("fu", 1, 1), (3, 1))
+    assert u.has(("fu", 1, 1), (3, 1))
+    assert not u.has(("fu", 2, 2), (4, 5))
+    assert v.has(("fu", 2, 2), (4, 5))
+
+
+# ------------------------------------------------------------------ routing
+def test_route_same_cycle_same_pe(arch):
+    u = Usage(arch, 4)
+    r = route_value(u, arch, 4, 1, 0, 3, 0, 3)
+    assert r is not None and r.steps == [(F, 0, 3)] and r.uses == []
+    assert route_value(u, arch, 4, 1, 0, 3, 1, 3) is None  # no 0-cycle hop
+
+
+def test_route_adjacent_hop_claims_one_xo_port(arch):
+    u = Usage(arch, 4)
+    r = route_value(u, arch, 4, 1, 0, 0, 1, 1)   # PE0 -> PE1 is an E hop
+    assert r is not None
+    assert r.steps == [(F, 0, 0), (F, 1, 1)]
+    assert r.uses == [(("xo", 0, 1, 0), (1, 0))]
+
+
+def test_route_hold_claims_write_port_and_regpool(arch):
+    u = Usage(arch, 4)
+    r = route_value(u, arch, 4, 1, 0, 0, 0, 2)   # wait 2 cycles in place
+    assert r is not None
+    assert r.steps == [(F, 0, 0), (R, 0, 1), (R, 0, 2)]
+    assert (("wr", 0, 0), (1, 0)) in r.uses
+    assert (("regpool", 0, 1), (1, 1)) in r.uses
+    assert (("regpool", 0, 2), (1, 2)) in r.uses
+
+
+def test_fanout_sharing_is_free(arch):
+    u = Usage(arch, 4)
+    r1 = route_value(u, arch, 4, 1, 0, 0, 2, 2)  # two E hops
+    assert r1 is not None
+    commit_route(u, r1)
+    r2 = route_value(u, arch, 4, 1, 0, 0, 2, 2)  # same value, same path
+    assert r2 is not None and r2.uses == []      # shares every resource
+    release_route(u, r1)
+    assert u.map == {}
+
+
+def test_route_blocked_port_fails_when_no_detour_fits(arch):
+    u = Usage(arch, 4)
+    u.add(("xo", 0, 1, 0), (9, 0))   # another value owns PE0's E port
+    assert route_value(u, arch, 4, 1, 0, 0, 1, 1) is None
+    # with one extra cycle the router detours (hold or S-E-N path)
+    assert route_value(u, arch, 4, 1, 0, 0, 1, 2) is not None

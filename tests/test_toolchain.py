@@ -155,6 +155,14 @@ def test_deprecated_verify_mapping_shim_still_works():
     assert m2.II == m.II
 
 
+def test_map_kernel_shim_defaults_match_mapper_options():
+    # the shim once defaulted ii_max=64 while MapperOptions said 32; the
+    # two entry points must escalate identically
+    import inspect
+    sig = inspect.signature(map_kernel)
+    assert sig.parameters["ii_max"].default == MapperOptions().ii_max
+
+
 def test_mapper_options_roundtrip():
     opts = MapperOptions(ii_max=24, seeds=(5, 6), ii_start=4,
                          time_budget_s=1.5)
