@@ -169,8 +169,60 @@ def bench_toolchain_cache() -> List[Dict]:
         shutil.rmtree(cache, ignore_errors=True)
 
 
+def bench_frontend_trace() -> List[Dict]:
+    """Front-end tracing overhead: time to trace each Table-I kernel
+    through the ``repro.frontend`` DSL vs a warm-cache Toolchain.compile
+    of the same kernel (target: trace < 5% of the warm compile)."""
+    from repro.core.adl import cluster_4x4
+    from repro.core.kernels_lib import build_conv, build_gemm
+    from repro.core.mapper import MapperOptions
+    from repro.core.toolchain import Toolchain
+
+    # arch is shared across kernels (as in any real sweep): what's timed
+    # below is tracing + spec assembly, not ADL construction
+    g = dict(TI=6, TK=8, TJ=6, arch=cluster_4x4())
+    c = dict(OH=5, OW=5, K=3, arch=cluster_4x4())
+    builders = {
+        "GEMM": lambda: build_gemm(**g, unroll=1),
+        "GEMM-U": lambda: build_gemm(**g, unroll=4),
+        "GEMM-U-C": lambda: build_gemm(**g, unroll=4, coalesced=True),
+        "CONV": lambda: build_conv(**c, variant="base"),
+        "CONV-U-C-1": lambda: build_conv(**c, variant="uc1"),
+        "CONV-U-C-2": lambda: build_conv(**c, variant="uc2"),
+    }
+    opts = MapperOptions()
+    cache = tempfile.mkdtemp(prefix="morpher-frontend-bench-")
+    try:
+        Toolchain(options=opts, cache_dir=cache).compile_many(
+            [b() for b in builders.values()])       # warm the disk cache
+        rows = []
+        for name, build in builders.items():
+            trace_us = float("inf")
+            for _ in range(20):                      # best-of: shields noise
+                t0 = time.perf_counter()
+                spec = build()
+                trace_us = min(trace_us, (time.perf_counter() - t0) * 1e6)
+            warm_us = float("inf")
+            for _ in range(10):
+                tc = Toolchain(options=opts, cache_dir=cache)  # no memo
+                t0 = time.perf_counter()
+                ck = tc.compile(spec)
+                warm_us = min(warm_us, (time.perf_counter() - t0) * 1e6)
+                assert ck.from_cache
+            rows.append(_row(f"trace_{name}", trace_us,
+                             warm_compile_us=round(warm_us),
+                             nodes=spec.dfg.n_nodes,
+                             ratio=round(trace_us / warm_us, 3)))
+        _print_rows(rows)
+        return rows
+    finally:
+        shutil.rmtree(cache, ignore_errors=True)
+
+
 BENCHES = {
     "table1": ("Table I (paper reproduction)", bench_table1),
+    "frontend_trace": ("frontend DSL tracing overhead (vs warm compile)",
+                       bench_frontend_trace),
     "mapper_sweep": ("mapper sweep (ADL design-space exploration)",
                      bench_mapper_sweep),
     "kernel_micro": ("Pallas kernel micro (interpret mode)",

@@ -11,8 +11,15 @@ All sites share one compiled tile artifact: the Toolchain's content-
 addressed cache makes every compile after the first — including sweeps
 over the whole zoo, and re-runs in later sessions — a cache hit.
 
+The target CGRA defaults to the paper's 4x4 cluster; pass a user-defined
+architecture as ``--arch-file <adl.json>`` (the ADL JSON produced by
+``CGRAArch.to_json`` — see ``examples/cluster_4x4.adl.json``) to retarget
+the whole analysis, the paper's architecture-adaptive claim from the
+command line.
+
 Run:  PYTHONPATH=src python examples/edge_deploy.py --arch llama3.2-1b
       add --all to sweep the whole model zoo off one warm cache
+      add --arch-file examples/cluster_4x4.adl.json for a custom target
 """
 import argparse
 import sys
@@ -21,8 +28,16 @@ import time
 sys.path.insert(0, "src")
 
 from repro.configs.registry import ARCH_IDS, get_config
-from repro.core import MapperOptions, Toolchain
+from repro.core import CGRAArch, MapperOptions, Toolchain
 from repro.core.offload import analyze_arch_gemms, model_gemm_sites
+
+
+def load_arch_file(path: str) -> CGRAArch:
+    """Load and validate a user-defined ADL architecture from JSON."""
+    with open(path, "r", encoding="utf-8") as f:
+        arch = CGRAArch.from_json(f.read())
+    arch.validate()
+    return arch
 
 
 def report_arch(arch_id: str, tokens: int, toolchain: Toolchain) -> None:
@@ -53,10 +68,19 @@ def main():
     ap.add_argument("--tokens", type=int, default=64)
     ap.add_argument("--all", action="store_true",
                     help="sweep every model in the zoo (one shared cache)")
+    ap.add_argument("--arch-file", default=None, metavar="ADL_JSON",
+                    help="user-defined CGRA architecture (ADL JSON, "
+                         "as written by CGRAArch.to_json)")
     args = ap.parse_args()
 
+    cgra = load_arch_file(args.arch_file) if args.arch_file else None
+    if cgra is not None:
+        print(f"target CGRA (from {args.arch_file}): {cgra.name}, "
+              f"{cgra.rows}x{cgra.cols} PEs, {len(cgra.banks)} banks, "
+              f"{cgra.datapath_bits}-bit datapath")
+
     # one Toolchain for the whole sweep: the tile compile happens once
-    toolchain = Toolchain(options=MapperOptions())
+    toolchain = Toolchain(arch=cgra, options=MapperOptions())
     for arch_id in (ARCH_IDS if args.all else [args.arch]):
         report_arch(arch_id, args.tokens, toolchain)
         if args.all:

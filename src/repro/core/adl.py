@@ -141,11 +141,20 @@ class CGRAArch:
         return CGRAArch(banks=banks, **d)
 
     def validate(self) -> None:
-        assert self.rows > 0 and self.cols > 0
+        """Raises ValueError on an inconsistent architecture (real errors,
+        not asserts: this guards untrusted user ADL files, e.g.
+        ``edge_deploy.py --arch-file``, and must survive ``python -O``)."""
+        if self.rows <= 0 or self.cols <= 0:
+            raise ValueError(f"{self.name}: grid {self.rows}x{self.cols} "
+                             f"must be positive")
         for b in self.banks:
             for p in b.pes:
-                assert 0 <= p < self.n_pes, f"bank {b.id} bad PE {p}"
-        assert self.regfile_size >= 1 and self.livein_regs >= 0
+                if not 0 <= p < self.n_pes:
+                    raise ValueError(f"{self.name}: bank {b.id} references "
+                                     f"PE {p} outside the {self.n_pes}-PE grid")
+        if self.regfile_size < 1 or self.livein_regs < 0:
+            raise ValueError(f"{self.name}: regfile_size must be >= 1 and "
+                             f"livein_regs >= 0")
 
 
 # ----------------------------------------------------------- stock designs

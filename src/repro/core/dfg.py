@@ -22,6 +22,7 @@ CGRA simulation must produce the same final memory state.
 from __future__ import annotations
 
 import enum
+import heapq
 import json
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
@@ -64,12 +65,16 @@ MEM_OPS = {Op.LOAD, Op.STORE}
 LATENCY = {Op.LOAD: 2}
 DEFAULT_LATENCY = 1
 
+# operand arity per op (binary ALU ops default to 2)
+_N_OPERANDS = {Op.CONST: 0, Op.LIVEIN: 0, Op.LOAD: 1, Op.STORE: 2,
+               Op.SELECT: 3}
+
 
 def latency(op: Op) -> int:
     return LATENCY.get(op, DEFAULT_LATENCY)
 
 
-@dataclass(frozen=True)
+@dataclass(frozen=True, slots=True)
 class Operand:
     """A data edge src -> consumer.
 
@@ -82,7 +87,7 @@ class Operand:
     init: int = 0
 
 
-@dataclass
+@dataclass(slots=True)
 class Node:
     id: int
     op: Op
@@ -145,23 +150,29 @@ class DFG:
         return edges
 
     def topo_order(self) -> List[int]:
-        """Topological order over dist==0 edges (loop body DAG)."""
+        """Topological order over dist==0 edges (loop body DAG).
+
+        Ready nodes resolve lowest-id-first (a min-heap; order-identical
+        to the historical sort-per-step implementation, without its
+        quadratic re-sorting — this sits on the tracing and reference-
+        execution hot paths)."""
         indeg = {i: 0 for i in self.nodes}
         succ: Dict[int, List[int]] = {i: [] for i in self.nodes}
-        for src, dst, _slot, opnd in self.data_edges():
-            if opnd.dist == 0:
-                indeg[dst] += 1
-                succ[src].append(dst)
-        ready = sorted([i for i, d in indeg.items() if d == 0])
+        for n in self.nodes.values():
+            for opnd in n.operands:
+                if opnd.dist == 0:
+                    indeg[n.id] += 1
+                    succ[opnd.src].append(n.id)
+        ready = [i for i, d in indeg.items() if d == 0]
+        heapq.heapify(ready)
         order: List[int] = []
         while ready:
-            v = ready.pop(0)
+            v = heapq.heappop(ready)
             order.append(v)
             for s in succ[v]:
                 indeg[s] -= 1
                 if indeg[s] == 0:
-                    ready.append(s)
-            ready.sort()
+                    heapq.heappush(ready, s)
         if len(order) != len(self.nodes):
             raise ValueError(f"DFG {self.name}: cycle through dist-0 edges")
         return order
@@ -177,8 +188,7 @@ class DFG:
                 raise ValueError(f"LIVEIN node {n.id} missing name")
             if n.op in MEM_OPS and n.array is None:
                 raise ValueError(f"mem node {n.id} missing array")
-            nops = {Op.CONST: 0, Op.LIVEIN: 0, Op.LOAD: 1, Op.STORE: 2,
-                    Op.SELECT: 3}.get(n.op, 2)
+            nops = _N_OPERANDS.get(n.op, 2)
             if len(n.operands) != nops:
                 raise ValueError(
                     f"node {n.id} op {n.op} expects {nops} operands, "
@@ -214,9 +224,36 @@ class DFG:
                         for src, dst, dist in d["mem_deps"]]
         return dfg
 
+    def canonical_dict(self) -> dict:
+        """Structural canonical form — the content-addressing identity.
+
+        Node ids are compacted to a dense 0..n-1 numbering (emission
+        order) and cosmetic node ``name`` labels are dropped: two DFGs
+        describing the same program through different front ends (the
+        hand-built :class:`DFGBuilder` wiring vs the ``repro.frontend``
+        tracer) canonicalize identically, while any semantic difference —
+        ops, operand wiring, loop-carried dists/inits, immediates, live-in
+        names, target arrays, memory ordering edges — still changes the
+        form (and therefore the compile cache key).
+        """
+        order = sorted(self.nodes)
+        remap = {nid: i for i, nid in enumerate(order)}
+        nodes = []
+        for nid in order:
+            n = self.nodes[nid]
+            nodes.append({
+                "id": remap[nid], "op": n.op.value,
+                "operands": [[remap[o.src], o.dist, o.init]
+                             for o in n.operands],
+                "imm": n.imm, "livein": n.livein, "array": n.array,
+            })
+        return {"name": self.name, "nodes": nodes,
+                "mem_deps": sorted([remap[m.src], remap[m.dst], m.dist]
+                                   for m in self.mem_deps)}
+
     def canonical_json(self) -> str:
         """Stable canonical form — the content-addressing key component."""
-        return json.dumps(self.to_json_dict(), sort_keys=True,
+        return json.dumps(self.canonical_dict(), sort_keys=True,
                           separators=(",", ":"))
 
     # ------------------------------------------------------- oracle semantics

@@ -1,9 +1,18 @@
-"""ML micro-kernel library: the paper's Listings 1-5 as DFG builders.
+"""ML micro-kernel library: the paper's Listings 1-5 as traced DSL kernels.
 
 Each builder returns a :class:`KernelSpec` — the DFG of the mapped loop
 level, the bank data layout, the host-side invocation schedule (outer
 sequential loops that stay on the host processor, exactly as in the paper's
 tiled dataflow), and a numpy golden model.
+
+The DFGs are produced by the ``repro.frontend`` tracer: the mapped loop
+body is written as restricted Python over a :class:`KernelContext`
+(array-ref loads/stores, traced arithmetic, counter primitives for the
+induction chains) instead of ~60 lines of hand-wired ``DFGBuilder`` nodes
+per kernel.  The traced DFGs are canonical-form-identical to the historic
+hand-built ones (``tests/handbuilt_kernels.py`` pins this via
+``spec_cache_key`` equality), so mappings, verify oracles and compile
+cache keys are unchanged by the front-end redesign.
 
 Variants (paper Table I):
   GEMM        base: innermost k loop mapped, (i, j) live-ins per invocation
@@ -13,6 +22,11 @@ Variants (paper Table I):
   CONV-U-C-1  k1/k2 fully unrolled (K=3), innermost spatial loop mapped
   CONV-U-C-2  all loops coalesced (Listing 5)
 
+Four further kernels — depthwise conv, average pooling, a bias+ReLU-fused
+GEMM epilogue and an int8 requantize stage — live in
+``repro.frontend.library``; they exist only as DSL kernels (no hand-built
+counterparts).
+
 Addressing is bank-local: LOAD/STORE nodes target ``bank<N>`` pseudo-arrays
 and the data layout's base offsets are folded into the address arithmetic,
 mirroring Morpher's co-generated data layout.
@@ -20,13 +34,14 @@ mirroring Morpher's co-generated data layout.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
+from ..frontend.tracer import KernelContext, unroll as _unroll_range
 from .adl import CGRAArch, cluster_4x4
-from .dfg import DFG, DFGBuilder, Op, Operand
-from .layout import ArrayDecl, DataLayout, Placement, assign_layout
+from .dfg import DFG
+from .layout import ArrayDecl, DataLayout, assign_layout
 
 
 # --------------------------------------------------------------------------
@@ -118,81 +133,27 @@ def build_gemm(TI: int = 64, TK: int = 16, TJ: int = 64,
     arch = arch or cluster_4x4()
     assert TK % unroll == 0
     layout = _gemm_layout(arch, TI, TK, TJ)
-    pw, pi, po = (layout.placements[k] for k in ("W", "I", "O"))
     U = unroll
 
-    b = DFGBuilder(f"gemm{'-u' if U > 1 else ''}{'-c' if coalesced else ''}")
-    cU = b.const(U)
-
+    ctx = KernelContext(
+        f"gemm{'-u' if U > 1 else ''}{'-c' if coalesced else ''}", layout)
+    W, I, O = ctx.arrays("W", "I", "O")
     if not coalesced:
-        i = b.livein("i")
-        j = b.livein("j")
-        # induction: k = prev + U  (init -U so iteration 0 sees k=0)
-        k = b.add(Operand(0, 0), cU, name="k")  # placeholder, patched below
-        b.dfg.nodes[k].operands = (Operand(k, dist=1, init=-U), Operand(cU))
-        # loop guard (the exit branch the LLVM pass would emit)
-        b.cmpge(k, b.const(TK - U), name="exit")
+        cU = ctx.const(U)
+        i, j = ctx.livein("i"), ctx.livein("j")
+        k = ctx.counter(step=cU, init=-U, stop=TK - U, name="k")
     else:
         # Listing 4: single coalesced loop; i/j/k are register-carried.
-        cTK = b.const(TK)
-        cTJ_b = b.const(TJ)
-        c0 = b.const(0)
-        c1 = b.const(1)
-        knew = b.add(Operand(0, 0), cU, name="knew")
-        kwrap = b.cmpge(knew, cTK, name="kwrap")
-        k = b.select(kwrap, c0, knew, name="k")
-        b.dfg.nodes[knew].operands = (Operand(k, dist=1, init=-U), Operand(cU))
-        jnew = b.add(Operand(0, 0), c1, name="jnew")
-        jwrap = b.cmpge(jnew, cTJ_b, name="jwrap")
-        jsel = b.select(jwrap, c0, jnew, name="jsel")
-        j = b.select(kwrap, jsel, Operand(0, 0), name="j")
-        b.dfg.nodes[jnew].operands = (Operand(j, dist=1, init=0), Operand(c1))
-        b.dfg.nodes[j].operands = (b.dfg.nodes[j].operands[0],
-                                   b.dfg.nodes[j].operands[1],
-                                   Operand(j, dist=1, init=0))
-        land = b.op(Op.AND, kwrap, jwrap, name="ijcarry")
-        inew = b.add(Operand(0, 0), c1, name="inew")
-        i = b.select(land, inew, Operand(0, 0), name="i")
-        b.dfg.nodes[inew].operands = (Operand(i, dist=1, init=0), Operand(c1))
-        b.dfg.nodes[i].operands = (b.dfg.nodes[i].operands[0],
-                                   b.dfg.nodes[i].operands[1],
-                                   Operand(i, dist=1, init=0))
+        i, j, k = ctx.coalesce(TI, TJ, (TK, U))
 
     # ---- body: O[i][j] += sum_u W[i][k+u] * I[k+u][j]
-    wrow = b.mul(i, b.const(TK), name="wrow")
-    wa0 = b.add(wrow, k, name="wa0")
-    if pw.base:
-        wa0 = b.add(wa0, b.const(pw.base))
-    waddrs = [wa0] + [b.add(wa0, b.const(u), name=f"wa{u}") for u in range(1, U)]
-    wl = [b.load(pw.bank_array, wa, name=f"w{u}") for u, wa in enumerate(waddrs)]
-
-    irow = b.mul(k, b.const(TJ), name="irow")
-    ia0 = b.add(irow, j, name="ia0")
-    if pi.base:
-        ia0 = b.add(ia0, b.const(pi.base))
-    iaddrs = [ia0] + [b.add(ia0, b.const(u * TJ), name=f"ia{u}")
-                      for u in range(1, U)]
-    il = [b.load(pi.bank_array, ia, name=f"i{u}") for u, ia in enumerate(iaddrs)]
-
-    prods = [b.mul(wl[u], il[u], name=f"p{u}") for u in range(U)]
-    # reduction tree
-    while len(prods) > 1:
-        nxt = [b.add(prods[t], prods[t + 1]) for t in range(0, len(prods) - 1, 2)]
-        if len(prods) % 2:
-            nxt.append(prods[-1])
-        prods = nxt
-    psum = prods[0]
-
-    orow = b.mul(i, b.const(TJ), name="orow")
-    oaddr = b.add(orow, j, name="oaddr")
-    if po.base:
-        oaddr = b.add(oaddr, b.const(po.base))
-    oval = b.load(po.bank_array, oaddr, name="oval")
-    acc = b.add(oval, psum, name="acc")
-    st = b.store(po.bank_array, oaddr, acc, name="ost")
-    b.mem_dep(st, oval, dist=1)
-
-    dfg = b.build()
+    wa = W.addr(i * TK + k)
+    wl = [W.at(a) for a in [wa + u for u in _unroll_range(U)]]
+    ia = I.addr(k * TJ + j)
+    il = [I.at(a) for a in [ia + u * TJ for u in _unroll_range(U)]]
+    psum = ctx.treesum(w * x for w, x in zip(wl, il))
+    ctx.accumulate(O, O.addr(i * TJ + j), psum)
+    dfg = ctx.build()
 
     if coalesced:
         mapped_iters = TI * TJ * (TK // U)
@@ -224,6 +185,39 @@ def _conv_layout(arch: CGRAArch, IH: int, IW: int, OH: int, OW: int,
     ])
 
 
+def _conv_init(layout: DataLayout, IH: int, IW: int, OH: int, OW: int,
+               K: int):
+    pw, pi, po = (layout.placements[k] for k in ("W", "I", "O"))
+
+    def init(rng: np.random.Generator) -> Dict[str, np.ndarray]:
+        banks = _bank_arrays(layout)
+        banks[pi.bank_array][pi.base:pi.base + pi.words] = \
+            rng.integers(-8, 8, size=IH * IW)
+        banks[pw.bank_array][pw.base:pw.base + pw.words] = \
+            rng.integers(-4, 4, size=K * K)
+        banks[po.bank_array][po.base:po.base + po.words] = 0
+        return banks
+    return init
+
+
+def _conv_golden(layout: DataLayout, IH: int, IW: int, OH: int, OW: int,
+                 K: int):
+    pw, pi, po = (layout.placements[k] for k in ("W", "I", "O"))
+
+    def golden(banks: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
+        out = {k: v.copy() for k, v in banks.items()}
+        I = banks[pi.bank_array][pi.base:pi.base + pi.words].reshape(IH, IW)
+        W = banks[pw.bank_array][pw.base:pw.base + pw.words].reshape(K, K)
+        O = banks[po.bank_array][po.base:po.base + po.words].reshape(OH, OW)
+        O = O.astype(np.int64)
+        for kk1 in range(K):
+            for kk2 in range(K):
+                O = O + I[kk1:kk1 + OH, kk2:kk2 + OW] * W[kk1, kk2]
+        out[po.bank_array][po.base:po.base + po.words] = _wrap16(O).reshape(-1)
+        return out
+    return golden
+
+
 def build_conv(OH: int = 62, OW: int = 62, K: int = 3,
                IH: Optional[int] = None, IW: Optional[int] = None,
                arch: Optional[CGRAArch] = None,
@@ -238,42 +232,17 @@ def build_conv(OH: int = 62, OW: int = 62, K: int = 3,
     IH = IH if IH is not None else OH + K - 1
     IW = IW if IW is not None else OW + K - 1
     layout = _conv_layout(arch, IH, IW, OH, OW, K)
-    pw, pi, po = (layout.placements[k] for k in ("W", "I", "O"))
 
-    b = DFGBuilder(f"conv-{variant}")
+    ctx = KernelContext(f"conv-{variant}", layout)
+    W, I, O = ctx.arrays("W", "I", "O")
 
     if variant == "base":
-        i = b.livein("i")
-        j = b.livein("j")
-        k1 = b.livein("k1")
-        c1 = b.const(1)
-        k2 = b.add(Operand(0, 0), c1, name="k2")
-        b.dfg.nodes[k2].operands = (Operand(k2, dist=1, init=-1), Operand(c1))
-        b.cmpge(k2, b.const(K - 1), name="exit")
+        i, j, k1 = ctx.livein("i"), ctx.livein("j"), ctx.livein("k1")
+        k2 = ctx.counter(stop=K - 1, name="k2")
 
-        r = b.add(i, k1, name="r")
-        rm = b.mul(r, b.const(IW), name="rm")
-        cc = b.add(j, k2, name="cc")
-        ia = b.add(rm, cc, name="ia")
-        if pi.base:
-            ia = b.add(ia, b.const(pi.base))
-        ival = b.load(pi.bank_array, ia, name="ival")
-
-        wr = b.mul(k1, b.const(K), name="wr")
-        wa = b.add(wr, k2, name="wa")
-        if pw.base:
-            wa = b.add(wa, b.const(pw.base))
-        wval = b.load(pw.bank_array, wa, name="wval")
-
-        prod = b.mul(ival, wval, name="prod")
-        om = b.mul(i, b.const(OW), name="om")
-        oa = b.add(om, j, name="oa")
-        if po.base:
-            oa = b.add(oa, b.const(po.base))
-        oval = b.load(po.bank_array, oa, name="oval")
-        acc = b.add(oval, prod, name="acc")
-        st = b.store(po.bank_array, oa, acc, name="ost")
-        b.mem_dep(st, oval, dist=1)
+        ival = I[(i + k1) * IW + (j + k2)]
+        prod = ival * W[k1 * K + k2]
+        ctx.accumulate(O, O.addr(i * OW + j), prod)
 
         mapped_iters = K
         invocations = [{"i": ii, "j": jj, "k1": kk}
@@ -282,59 +251,26 @@ def build_conv(OH: int = 62, OW: int = 62, K: int = 3,
         liveins_per_inv = 3
 
     elif variant in ("uc1", "uc2"):
-        c1 = b.const(1)
-        c0 = b.const(0)
+        c1, c0 = ctx.const(1), ctx.const(0)
         if variant == "uc1":
-            i = b.livein("i")
-            j = b.add(Operand(0, 0), c1, name="j")
-            b.dfg.nodes[j].operands = (Operand(j, dist=1, init=-1), Operand(c1))
-            b.cmpge(j, b.const(OW - 1), name="exit")
+            i = ctx.livein("i")
+            j = ctx.counter(step=c1, init=-1, stop=OW - 1, name="j")
         else:
             # Listing 5: coalesce (i, j) into one induction chain.
-            jnew = b.add(Operand(0, 0), c1, name="jnew")
-            jwrap = b.cmpge(jnew, b.const(OW), name="jwrap")
-            j = b.select(jwrap, c0, jnew, name="j")
-            b.dfg.nodes[jnew].operands = (Operand(j, dist=1, init=-1),
-                                          Operand(c1))
-            inew = b.add(Operand(0, 0), c1, name="inew")
-            i = b.select(jwrap, inew, Operand(0, 0), name="i")
-            b.dfg.nodes[inew].operands = (Operand(i, dist=1, init=0),
-                                          Operand(c1))
-            b.dfg.nodes[i].operands = (b.dfg.nodes[i].operands[0],
-                                       b.dfg.nodes[i].operands[1],
-                                       Operand(i, dist=1, init=0))
+            j, jwrap = ctx.wrapping_counter(c1, OW, init=-1, name="j")
+            i = ctx.gated_counter(c1, jwrap, name="i")
 
-        # fully unrolled K x K MACs
-        om = b.mul(i, b.const(OW), name="om")
-        oa = b.add(om, j, name="oa")
-        if po.base:
-            oa = b.add(oa, b.const(po.base))
-        oval = b.load(po.bank_array, oa, name="oval")
-
+        # fully unrolled K x K MACs against the resident accumulator word
+        oa = O.addr(i * OW + j)
+        oval = O.at(oa, name="oval")
         prods = []
-        for kk1 in range(K):
-            r = b.add(i, b.const(kk1), name=f"r{kk1}") if kk1 else i
-            rm = b.mul(r, b.const(IW), name=f"rm{kk1}")
-            for kk2 in range(K):
-                cc = b.add(j, b.const(kk2), name=f"cc{kk2}") if kk2 else j
-                ia = b.add(rm, cc, name=f"ia{kk1}{kk2}")
-                if pi.base:
-                    ia = b.add(ia, b.const(pi.base))
-                ival = b.load(pi.bank_array, ia, name=f"iv{kk1}{kk2}")
-                widx = pw.base + kk1 * K + kk2
-                wval = b.load(pw.bank_array, b.const(widx),
-                              name=f"wv{kk1}{kk2}")
-                prods.append(b.mul(ival, wval, name=f"p{kk1}{kk2}"))
-        while len(prods) > 1:
-            nxt = [b.add(prods[t], prods[t + 1])
-                   for t in range(0, len(prods) - 1, 2)]
-            if len(prods) % 2:
-                nxt.append(prods[-1])
-            prods = nxt
-
-        acc = b.add(oval, prods[0], name="acc")
-        st = b.store(po.bank_array, oa, acc, name="ost")
-        b.mem_dep(st, oval, dist=1)
+        for kk1 in _unroll_range(K):
+            rm = (i + kk1) * IW
+            for kk2 in _unroll_range(K):
+                iv = I.at(I.addr(rm + (j + kk2)), name=f"iv{kk1}{kk2}")
+                prods.append(iv * W[kk1 * K + kk2])
+        st = O.store_at(oa, oval + ctx.treesum(prods), name="ost")
+        ctx.loop_carried(st, oval)
 
         if variant == "uc1":
             mapped_iters = OW
@@ -347,33 +283,13 @@ def build_conv(OH: int = 62, OW: int = 62, K: int = 3,
     else:
         raise ValueError(variant)
 
-    dfg = b.build()
-
-    def init_banks(rng: np.random.Generator) -> Dict[str, np.ndarray]:
-        banks = _bank_arrays(layout)
-        banks[pi.bank_array][pi.base:pi.base + pi.words] = \
-            rng.integers(-8, 8, size=IH * IW)
-        banks[pw.bank_array][pw.base:pw.base + pw.words] = \
-            rng.integers(-4, 4, size=K * K)
-        banks[po.bank_array][po.base:po.base + po.words] = 0
-        return banks
-
-    def golden(banks: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
-        out = {k: v.copy() for k, v in banks.items()}
-        I = banks[pi.bank_array][pi.base:pi.base + pi.words].reshape(IH, IW)
-        W = banks[pw.bank_array][pw.base:pw.base + pw.words].reshape(K, K)
-        O = banks[po.bank_array][po.base:po.base + po.words].reshape(OH, OW)
-        O = O.astype(np.int64)
-        for kk1 in range(K):
-            for kk2 in range(K):
-                O = O + I[kk1:kk1 + OH, kk2:kk2 + OW] * W[kk1, kk2]
-        out[po.bank_array][po.base:po.base + po.words] = _wrap16(O).reshape(-1)
-        return out
+    dfg = ctx.build()
 
     return KernelSpec(
         name=dfg.name, dfg=dfg, arch=arch, layout=layout,
         mapped_iters=mapped_iters, invocations=invocations,
-        golden=golden, init_banks=init_banks,
+        golden=_conv_golden(layout, IH, IW, OH, OW, K),
+        init_banks=_conv_init(layout, IH, IW, OH, OW, K),
         meta=dict(OH=OH, OW=OW, K=K, IH=IH, IW=IW,
                   liveins_per_inv=liveins_per_inv),
     )

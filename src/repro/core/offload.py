@@ -17,7 +17,7 @@ from ..configs.registry import get_config
 from ..models.common import ModelConfig
 from .adl import cluster_4x4
 from .costmodel import F_CLK_HZ
-from .kernels_lib import build_gemm
+from .kernels_lib import KernelSpec, build_gemm
 from .mapper import MapError
 from .toolchain import CompiledKernel, Toolchain, default_toolchain
 
@@ -50,12 +50,34 @@ def model_gemm_sites(cfg: ModelConfig, tokens: int = 64) -> List[GemmSite]:
 @dataclass
 class OffloadReport:
     site: str
-    tile: Tuple[int, int, int]
+    tile: Tuple[int, ...]
     nodes: int
     II: int
     mii: int
     utilization: float
     est_tile_us: float
+
+
+def analyze_kernel(kernel, arch=None,
+                   toolchain: Optional[Toolchain] = None) -> OffloadReport:
+    """Table-I methodology for any kernel: compile a :class:`KernelSpec`
+    — or a traced ``repro.frontend`` ``KernelProgram``, bound here to the
+    requested architecture — and report II / MII / utilization and the
+    estimated full-kernel latency (all invocations of the mapped loop)."""
+    tc = toolchain or default_toolchain()
+    if hasattr(kernel, "bind") and not isinstance(kernel, KernelSpec):
+        kernel = kernel.bind(arch or tc.arch)
+    elif arch is not None and kernel.arch is not arch:
+        raise ValueError(
+            f"{kernel.name}: arch= applies only to arch-deferred kernel "
+            f"programs; this KernelSpec is already bound to "
+            f"{kernel.arch.name} (rebuild the spec against the target arch)")
+    ck = tc.compile(kernel)
+    cyc = ck.schedule_cycles()
+    return OffloadReport(
+        site=ck.name, tile=(), nodes=ck.dfg.n_nodes, II=ck.II, mii=ck.mii,
+        utilization=ck.utilization,
+        est_tile_us=len(ck.invocations) * cyc / F_CLK_HZ * 1e6)
 
 
 def analyze_gemm_tile(TI: int = 16, TK: int = 8, TJ: int = 16,

@@ -66,10 +66,13 @@ def default_cache_dir() -> str:
 def spec_cache_key(spec: KernelSpec, options: MapperOptions) -> str:
     """Content address of a compile: everything that determines the
     artifact, nothing that doesn't (golden-model closures are derived from
-    the same structural inputs and deliberately excluded)."""
+    the same structural inputs and deliberately excluded; the DFG enters
+    in canonical form, so cosmetic node names — which differ between the
+    hand-built builders and the ``repro.frontend`` tracer — cannot change
+    the address)."""
     ident = {
         "v": ARTIFACT_VERSION,
-        "dfg": spec.dfg.to_json_dict(),
+        "dfg": spec.dfg.canonical_dict(),
         "arch": json.loads(spec.arch.to_json()),
         "options": options.to_json_dict(),
         "layout": spec.layout.to_json_dict(),
@@ -324,14 +327,25 @@ class Toolchain:
                 self._memo[key] = ck
         return ck
 
+    def _bind(self, spec) -> KernelSpec:
+        """Accept traced front-end kernels: an arch-deferred DSL program
+        (anything exposing ``bind(arch)``, e.g.
+        ``repro.frontend.KernelProgram``) is traced against this
+        toolchain's architecture here."""
+        if not isinstance(spec, KernelSpec) and hasattr(spec, "bind"):
+            return spec.bind(self.arch)
+        return spec
+
     def compile(self, spec: KernelSpec,
                 options: Optional[MapperOptions] = None,
                 use_cache: bool = True) -> CompiledKernel:
-        """KernelSpec -> CompiledKernel (map + generate configuration).
+        """KernelSpec (or frontend KernelProgram) -> CompiledKernel
+        (map + generate configuration).
 
         Memoized in-process and through the content-addressed disk cache;
         a hit returns without re-running placement/routing.
         """
+        spec = self._bind(spec)
         opt = options or self.options
         key = spec_cache_key(spec, opt)
         if use_cache:
@@ -355,7 +369,7 @@ class Toolchain:
         structural parts round-trip losslessly).  Falls back to sequential
         in-process compiles if no process pool is available.
         """
-        specs = list(specs)
+        specs = [self._bind(s) for s in specs]
         opt = options or self.options
         keys = [spec_cache_key(s, opt) for s in specs]
         results: List[Optional[CompiledKernel]] = [None] * len(specs)

@@ -16,6 +16,19 @@ def qgemm_ref(a: jnp.ndarray, b: jnp.ndarray, a_scale: jnp.ndarray,
     return out.astype(out_dtype)
 
 
+def requantize_ref(acc, mult: int, shift: int, qmin: int = -127,
+                   qmax: int = 127):
+    """Fixed-point requantization: ``clamp((acc * mult) >> shift)``.
+
+    Operator-only on purpose so it runs identically on numpy *and* jax
+    integer arrays: the CGRA-side ``requant-int8`` DSL kernel
+    (``repro.frontend.library``) uses this same function as its golden
+    model, pinning the fabric datapath and the Pallas int8 path to one
+    rounding/saturation semantics."""
+    v = (acc * mult) >> shift
+    return v.clip(qmin, qmax)
+
+
 def quantize_rowwise(x: jnp.ndarray):
     """Symmetric per-row int8 quantization: returns (q, scale)."""
     amax = jnp.max(jnp.abs(x), axis=1)

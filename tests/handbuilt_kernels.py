@@ -1,0 +1,257 @@
+"""Golden fixture: the pre-DSL hand-built Table-I kernel builders.
+
+This is the seed's ``DFGBuilder`` wiring for GEMM/CONV (verbatim), kept as
+the reference the traced front end is pinned against: for every legacy
+Table-I variant, ``repro.core.kernels_lib`` (now written on the
+``repro.frontend`` tracer) must produce a ``KernelSpec`` whose
+``spec_cache_key`` — and therefore canonical DFG form — is identical to
+the hand-built one.  Do not "improve" this module; it is the contract.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+from repro.core.adl import CGRAArch, cluster_4x4
+from repro.core.dfg import DFGBuilder, Op, Operand
+from repro.core.kernels_lib import (KernelSpec, _conv_golden, _conv_init,
+                                    _conv_layout, _gemm_golden, _gemm_init,
+                                    _gemm_layout)
+
+
+def build_gemm_handbuilt(TI: int = 64, TK: int = 16, TJ: int = 64,
+                         arch: Optional[CGRAArch] = None,
+                         unroll: int = 1, coalesced: bool = False
+                         ) -> KernelSpec:
+    arch = arch or cluster_4x4()
+    assert TK % unroll == 0
+    layout = _gemm_layout(arch, TI, TK, TJ)
+    pw, pi, po = (layout.placements[k] for k in ("W", "I", "O"))
+    U = unroll
+
+    b = DFGBuilder(f"gemm{'-u' if U > 1 else ''}{'-c' if coalesced else ''}")
+    cU = b.const(U)
+
+    if not coalesced:
+        i = b.livein("i")
+        j = b.livein("j")
+        k = b.add(Operand(0, 0), cU, name="k")
+        b.dfg.nodes[k].operands = (Operand(k, dist=1, init=-U), Operand(cU))
+        b.cmpge(k, b.const(TK - U), name="exit")
+    else:
+        cTK = b.const(TK)
+        cTJ_b = b.const(TJ)
+        c0 = b.const(0)
+        c1 = b.const(1)
+        knew = b.add(Operand(0, 0), cU, name="knew")
+        kwrap = b.cmpge(knew, cTK, name="kwrap")
+        k = b.select(kwrap, c0, knew, name="k")
+        b.dfg.nodes[knew].operands = (Operand(k, dist=1, init=-U), Operand(cU))
+        jnew = b.add(Operand(0, 0), c1, name="jnew")
+        jwrap = b.cmpge(jnew, cTJ_b, name="jwrap")
+        jsel = b.select(jwrap, c0, jnew, name="jsel")
+        j = b.select(kwrap, jsel, Operand(0, 0), name="j")
+        b.dfg.nodes[jnew].operands = (Operand(j, dist=1, init=0), Operand(c1))
+        b.dfg.nodes[j].operands = (b.dfg.nodes[j].operands[0],
+                                   b.dfg.nodes[j].operands[1],
+                                   Operand(j, dist=1, init=0))
+        land = b.op(Op.AND, kwrap, jwrap, name="ijcarry")
+        inew = b.add(Operand(0, 0), c1, name="inew")
+        i = b.select(land, inew, Operand(0, 0), name="i")
+        b.dfg.nodes[inew].operands = (Operand(i, dist=1, init=0), Operand(c1))
+        b.dfg.nodes[i].operands = (b.dfg.nodes[i].operands[0],
+                                   b.dfg.nodes[i].operands[1],
+                                   Operand(i, dist=1, init=0))
+
+    wrow = b.mul(i, b.const(TK), name="wrow")
+    wa0 = b.add(wrow, k, name="wa0")
+    if pw.base:
+        wa0 = b.add(wa0, b.const(pw.base))
+    waddrs = [wa0] + [b.add(wa0, b.const(u), name=f"wa{u}") for u in range(1, U)]
+    wl = [b.load(pw.bank_array, wa, name=f"w{u}") for u, wa in enumerate(waddrs)]
+
+    irow = b.mul(k, b.const(TJ), name="irow")
+    ia0 = b.add(irow, j, name="ia0")
+    if pi.base:
+        ia0 = b.add(ia0, b.const(pi.base))
+    iaddrs = [ia0] + [b.add(ia0, b.const(u * TJ), name=f"ia{u}")
+                      for u in range(1, U)]
+    il = [b.load(pi.bank_array, ia, name=f"i{u}") for u, ia in enumerate(iaddrs)]
+
+    prods = [b.mul(wl[u], il[u], name=f"p{u}") for u in range(U)]
+    while len(prods) > 1:
+        nxt = [b.add(prods[t], prods[t + 1]) for t in range(0, len(prods) - 1, 2)]
+        if len(prods) % 2:
+            nxt.append(prods[-1])
+        prods = nxt
+    psum = prods[0]
+
+    orow = b.mul(i, b.const(TJ), name="orow")
+    oaddr = b.add(orow, j, name="oaddr")
+    if po.base:
+        oaddr = b.add(oaddr, b.const(po.base))
+    oval = b.load(po.bank_array, oaddr, name="oval")
+    acc = b.add(oval, psum, name="acc")
+    st = b.store(po.bank_array, oaddr, acc, name="ost")
+    b.mem_dep(st, oval, dist=1)
+
+    dfg = b.build()
+
+    if coalesced:
+        mapped_iters = TI * TJ * (TK // U)
+        invocations: List[Dict[str, int]] = [{}]
+    else:
+        mapped_iters = TK // U
+        invocations = [{"i": ii, "j": jj} for ii in range(TI) for jj in range(TJ)]
+
+    return KernelSpec(
+        name=dfg.name, dfg=dfg, arch=arch, layout=layout,
+        mapped_iters=mapped_iters, invocations=invocations,
+        golden=_gemm_golden(layout, TI, TK, TJ),
+        init_banks=_gemm_init(layout, TI, TK, TJ),
+        meta=dict(TI=TI, TK=TK, TJ=TJ, unroll=U, coalesced=int(coalesced),
+                  macs_per_iter=U, liveins_per_inv=0 if coalesced else 2),
+    )
+
+
+def build_conv_handbuilt(OH: int = 62, OW: int = 62, K: int = 3,
+                         IH: Optional[int] = None, IW: Optional[int] = None,
+                         arch: Optional[CGRAArch] = None,
+                         variant: str = "base") -> KernelSpec:
+    arch = arch or cluster_4x4()
+    IH = IH if IH is not None else OH + K - 1
+    IW = IW if IW is not None else OW + K - 1
+    layout = _conv_layout(arch, IH, IW, OH, OW, K)
+    pw, pi, po = (layout.placements[k] for k in ("W", "I", "O"))
+
+    b = DFGBuilder(f"conv-{variant}")
+
+    if variant == "base":
+        i = b.livein("i")
+        j = b.livein("j")
+        k1 = b.livein("k1")
+        c1 = b.const(1)
+        k2 = b.add(Operand(0, 0), c1, name="k2")
+        b.dfg.nodes[k2].operands = (Operand(k2, dist=1, init=-1), Operand(c1))
+        b.cmpge(k2, b.const(K - 1), name="exit")
+
+        r = b.add(i, k1, name="r")
+        rm = b.mul(r, b.const(IW), name="rm")
+        cc = b.add(j, k2, name="cc")
+        ia = b.add(rm, cc, name="ia")
+        if pi.base:
+            ia = b.add(ia, b.const(pi.base))
+        ival = b.load(pi.bank_array, ia, name="ival")
+
+        wr = b.mul(k1, b.const(K), name="wr")
+        wa = b.add(wr, k2, name="wa")
+        if pw.base:
+            wa = b.add(wa, b.const(pw.base))
+        wval = b.load(pw.bank_array, wa, name="wval")
+
+        prod = b.mul(ival, wval, name="prod")
+        om = b.mul(i, b.const(OW), name="om")
+        oa = b.add(om, j, name="oa")
+        if po.base:
+            oa = b.add(oa, b.const(po.base))
+        oval = b.load(po.bank_array, oa, name="oval")
+        acc = b.add(oval, prod, name="acc")
+        st = b.store(po.bank_array, oa, acc, name="ost")
+        b.mem_dep(st, oval, dist=1)
+
+        mapped_iters = K
+        invocations = [{"i": ii, "j": jj, "k1": kk}
+                       for ii in range(OH) for jj in range(OW)
+                       for kk in range(K)]
+        liveins_per_inv = 3
+
+    elif variant in ("uc1", "uc2"):
+        c1 = b.const(1)
+        c0 = b.const(0)
+        if variant == "uc1":
+            i = b.livein("i")
+            j = b.add(Operand(0, 0), c1, name="j")
+            b.dfg.nodes[j].operands = (Operand(j, dist=1, init=-1), Operand(c1))
+            b.cmpge(j, b.const(OW - 1), name="exit")
+        else:
+            jnew = b.add(Operand(0, 0), c1, name="jnew")
+            jwrap = b.cmpge(jnew, b.const(OW), name="jwrap")
+            j = b.select(jwrap, c0, jnew, name="j")
+            b.dfg.nodes[jnew].operands = (Operand(j, dist=1, init=-1),
+                                          Operand(c1))
+            inew = b.add(Operand(0, 0), c1, name="inew")
+            i = b.select(jwrap, inew, Operand(0, 0), name="i")
+            b.dfg.nodes[inew].operands = (Operand(i, dist=1, init=0),
+                                          Operand(c1))
+            b.dfg.nodes[i].operands = (b.dfg.nodes[i].operands[0],
+                                       b.dfg.nodes[i].operands[1],
+                                       Operand(i, dist=1, init=0))
+
+        om = b.mul(i, b.const(OW), name="om")
+        oa = b.add(om, j, name="oa")
+        if po.base:
+            oa = b.add(oa, b.const(po.base))
+        oval = b.load(po.bank_array, oa, name="oval")
+
+        prods = []
+        for kk1 in range(K):
+            r = b.add(i, b.const(kk1), name=f"r{kk1}") if kk1 else i
+            rm = b.mul(r, b.const(IW), name=f"rm{kk1}")
+            for kk2 in range(K):
+                cc = b.add(j, b.const(kk2), name=f"cc{kk2}") if kk2 else j
+                ia = b.add(rm, cc, name=f"ia{kk1}{kk2}")
+                if pi.base:
+                    ia = b.add(ia, b.const(pi.base))
+                ival = b.load(pi.bank_array, ia, name=f"iv{kk1}{kk2}")
+                widx = pw.base + kk1 * K + kk2
+                wval = b.load(pw.bank_array, b.const(widx),
+                              name=f"wv{kk1}{kk2}")
+                prods.append(b.mul(ival, wval, name=f"p{kk1}{kk2}"))
+        while len(prods) > 1:
+            nxt = [b.add(prods[t], prods[t + 1])
+                   for t in range(0, len(prods) - 1, 2)]
+            if len(prods) % 2:
+                nxt.append(prods[-1])
+            prods = nxt
+
+        acc = b.add(oval, prods[0], name="acc")
+        st = b.store(po.bank_array, oa, acc, name="ost")
+        b.mem_dep(st, oval, dist=1)
+
+        if variant == "uc1":
+            mapped_iters = OW
+            invocations = [{"i": ii} for ii in range(OH)]
+            liveins_per_inv = 1
+        else:
+            mapped_iters = OH * OW
+            invocations = [{}]
+            liveins_per_inv = 0
+    else:
+        raise ValueError(variant)
+
+    dfg = b.build()
+
+    return KernelSpec(
+        name=dfg.name, dfg=dfg, arch=arch, layout=layout,
+        mapped_iters=mapped_iters, invocations=invocations,
+        golden=_conv_golden(layout, IH, IW, OH, OW, K),
+        init_banks=_conv_init(layout, IH, IW, OH, OW, K),
+        meta=dict(OH=OH, OW=OW, K=K, IH=IH, IW=IW,
+                  liveins_per_inv=liveins_per_inv),
+    )
+
+
+def table1_kernels_handbuilt(small: bool = False) -> Dict[str, KernelSpec]:
+    if small:
+        g = dict(TI=6, TK=8, TJ=6)
+        c = dict(OH=5, OW=5, K=3)
+    else:
+        g = dict(TI=64, TK=16, TJ=64)
+        c = dict(OH=62, OW=62, K=3)
+    return {
+        "GEMM": build_gemm_handbuilt(**g, unroll=1, coalesced=False),
+        "GEMM-U": build_gemm_handbuilt(**g, unroll=4, coalesced=False),
+        "GEMM-U-C": build_gemm_handbuilt(**g, unroll=4, coalesced=True),
+        "CONV": build_conv_handbuilt(**c, variant="base"),
+        "CONV-U-C-1": build_conv_handbuilt(**c, variant="uc1"),
+        "CONV-U-C-2": build_conv_handbuilt(**c, variant="uc2"),
+    }
