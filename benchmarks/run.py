@@ -8,6 +8,8 @@
   sim_throughput  -- JAX simulator cycles/s (the Verilator-replacement claim)
   toolchain_cache -- cold vs warm Toolchain.compile over the Table-I kernel
                      set (the content-addressed artifact cache)
+  verify_batched  -- per-seed sequential verify vs the batched verification
+                     engine (vmapped multi-seed simulation) at batch=8
 
 Each benchmark prints ``name,us_per_call,derived`` CSV rows *and* returns
 machine-readable rows; ``main`` writes one ``BENCH_<name>.json`` artifact
@@ -16,7 +18,11 @@ per benchmark (schema: ``{"bench", "schema", "git_sha", "rows": [{"name",
 
 CLI:  python -m benchmarks.run [--only sim_throughput,toolchain_cache]
                                [--out DIR]
-The output directory defaults to ``$MORPHER_BENCH_DIR`` or the cwd.
+      python -m benchmarks.run --check-regression before.json after.json
+                               [--tol 0.15]
+The output directory defaults to ``$MORPHER_BENCH_DIR`` or the cwd; the
+regression comparator accepts files or directories of BENCH artifacts and
+exits nonzero when any benchmark row slows beyond the tolerance.
 """
 from __future__ import annotations
 
@@ -169,6 +175,49 @@ def bench_toolchain_cache() -> List[Dict]:
         shutil.rmtree(cache, ignore_errors=True)
 
 
+def bench_verify_batched() -> List[Dict]:
+    """Aggregate verification throughput over the Table-I (small dims) +
+    DSL kernel set: per-seed sequential ``verify`` vs one ``verify_batch``
+    per kernel at batch=8 (the batched engine: vectorized test-data
+    generation, batched numpy DFG oracle, vmapped simulator through the
+    process-wide executable cache).  Target: >= 3x."""
+    from repro.core import simcache
+    from repro.core.kernels_lib import table1_kernels
+    from repro.core.toolchain import Toolchain
+    from repro.frontend.library import dsl_kernels
+
+    seeds = list(range(8))
+    specs = {**table1_kernels(small=True), **dsl_kernels()}
+    cks = Toolchain(cache_dir="").compile_many(list(specs.values()))
+    # warm both paths once so XLA traces (amortized by the persistent
+    # executable cache in any real verification fleet) are off the clock
+    for ck in cks:
+        ck.verify(seed=seeds[0])
+        ck.verify_batch(seeds)
+    trace_stats = simcache.stats()
+
+    t0 = time.time()
+    for ck in cks:
+        for s in seeds:
+            ck.verify(seed=s)
+    seq = time.time() - t0
+    t0 = time.time()
+    for ck in cks:
+        ck.verify_batch(seeds)
+    bat = time.time() - t0
+
+    n = len(cks) * len(seeds)
+    rows = [_row("verify_batched", bat * 1e6,
+                 seq_us=round(seq * 1e6), kernels=len(cks),
+                 batch=len(seeds), verifies=n,
+                 seq_verifies_per_s=round(n / seq, 1),
+                 batch_verifies_per_s=round(n / bat, 1),
+                 speedup=round(seq / bat, 2),
+                 sim_executables=trace_stats["entries"])]
+    _print_rows(rows)
+    return rows
+
+
 def bench_frontend_trace() -> List[Dict]:
     """Front-end tracing overhead: time to trace each Table-I kernel
     through the ``repro.frontend`` DSL vs a warm-cache Toolchain.compile
@@ -230,7 +279,53 @@ BENCHES = {
     "sim_throughput": ("simulator throughput", bench_sim_throughput),
     "toolchain_cache": ("toolchain artifact cache (cold vs warm)",
                         bench_toolchain_cache),
+    "verify_batched": ("batched vs sequential verification throughput",
+                       bench_verify_batched),
 }
+
+
+def check_regression(before: str, after: str, tol: float = 0.15) -> int:
+    """Compare two BENCH_<name>.json artifacts (or two directories of
+    them): any row whose ``us`` grew by more than ``tol`` (relative) is a
+    throughput regression.  Returns a nonzero exit status if any row
+    regressed; rows present on only one side are reported but never fail.
+    """
+    def load_rows(path: str) -> Dict[str, Dict]:
+        files = (sorted(os.path.join(path, f) for f in os.listdir(path)
+                        if f.startswith("BENCH_") and f.endswith(".json"))
+                 if os.path.isdir(path) else [path])
+        rows: Dict[str, Dict] = {}
+        for fn in files:
+            with open(fn, "r", encoding="utf-8") as f:
+                d = json.load(f)
+                for r in d["rows"]:
+                    # key by (bench, row): same-named rows from different
+                    # benchmarks must not shadow each other
+                    rows[f"{d['bench']}/{r['name']}"] = r
+        return rows
+
+    b_rows, a_rows = load_rows(before), load_rows(after)
+    failed = []
+    for name in sorted(set(b_rows) | set(a_rows)):
+        if name not in b_rows:
+            print(f"NEW       {name}: {a_rows[name]['us']:.0f}us")
+            continue
+        if name not in a_rows:
+            print(f"REMOVED   {name} (was {b_rows[name]['us']:.0f}us)")
+            continue
+        b_us, a_us = b_rows[name]["us"], a_rows[name]["us"]
+        rel = (a_us - b_us) / b_us if b_us else 0.0
+        verdict = "REGRESSED" if rel > tol else "ok"
+        print(f"{verdict:9s} {name}: {b_us:.0f}us -> {a_us:.0f}us "
+              f"({rel:+.1%}, tol {tol:.0%})")
+        if rel > tol:
+            failed.append(name)
+    if failed:
+        print(f"# {len(failed)} row(s) regressed beyond {tol:.0%}: "
+              f"{', '.join(failed)}")
+        return 1
+    print("# no regressions")
+    return 0
 
 
 def main(argv: Optional[List[str]] = None) -> None:
@@ -241,7 +336,18 @@ def main(argv: Optional[List[str]] = None) -> None:
     ap.add_argument("--out", default=None,
                     help="directory for BENCH_<name>.json artifacts "
                          "(default: $MORPHER_BENCH_DIR or cwd)")
+    ap.add_argument("--check-regression", nargs=2,
+                    metavar=("BEFORE", "AFTER"),
+                    help="compare two BENCH json files (or directories of "
+                         "them) instead of running benchmarks; exits "
+                         "nonzero if any row slowed beyond --tol")
+    ap.add_argument("--tol", type=float, default=0.15,
+                    help="relative slowdown tolerated by "
+                         "--check-regression (default 0.15)")
     args = ap.parse_args(argv)
+    if args.check_regression:
+        raise SystemExit(check_regression(*args.check_regression,
+                                          tol=args.tol))
     names = list(BENCHES) if not args.only else [
         n.strip() for n in args.only.split(",") if n.strip()]
     unknown = [n for n in names if n not in BENCHES]

@@ -45,8 +45,11 @@ _FLOW = {
     # configuration + simulation + verification
     "SimConfig": ".config_gen",
     "generate_config": ".config_gen",
+    "narrowed_planes": ".config_gen",
     "simulate": ".simulator",
+    "simulate_batch": ".simulator",
     "generate_test_data": ".verify",
+    "generate_test_data_batch": ".verify",
     "check_dfg_semantics": ".verify",
     "verify_mapping": ".verify",      # deprecated shim
     # cost model

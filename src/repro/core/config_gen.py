@@ -76,8 +76,10 @@ class SimConfig:
         return (n_iters - 1) * self.II + self.depth
 
     def to_json(self) -> str:
+        # underscore attributes are transient caches (e.g. the simulator's
+        # device-resident plane copies), not part of the artifact
         d = {k: (v.tolist() if isinstance(v, np.ndarray) else v)
-             for k, v in self.__dict__.items()}
+             for k, v in self.__dict__.items() if not k.startswith("_")}
         return json.dumps(d)
 
     _ARRAY_DTYPES = {
@@ -96,6 +98,49 @@ class SimConfig:
         d["lireg_assign"] = {name: tuple(v)
                              for name, v in d["lireg_assign"].items()}
         return SimConfig(**d)
+
+
+# the configuration planes the simulator consumes, in a stable order (the
+# 13 II-slot-indexed planes first, then the static neighbour table)
+SIM_PLANES = ("op", "imm", "src_kind", "src_idx", "force_before",
+              "force_val", "xo_kind", "xo_idx", "rf_kind", "rf_idx",
+              "mem_off", "mem_words", "valid_start", "nbr_idx")
+
+
+def _fit_dtype(a: np.ndarray) -> np.dtype:
+    """Smallest of int8/int16/int32 that represents every value exactly."""
+    if a.size:
+        lo, hi = int(a.min()), int(a.max())
+        for dt in (np.int8, np.int16):
+            info = np.iinfo(dt)
+            if info.min <= lo and hi <= info.max:
+                return np.dtype(dt)
+    else:
+        return np.dtype(np.int8)
+    return np.dtype(np.int32)
+
+
+def narrowed_planes(cfg: SimConfig) -> Dict[str, np.ndarray]:
+    """Per-plane dtype narrowing for the simulator's config streams.
+
+    Mux kinds, opcodes and register indices are tiny enumerations and
+    addresses/immediates are bounded by the bank sizes and the datapath
+    width, so most planes fit int8/int16.  The simulator pre-tiles these
+    planes into per-cycle scan streams; narrowing shrinks those streams
+    (and the executable's constant footprint) by ~4x, letting the tiling
+    cap admit proportionally longer simulations.  Narrowing is exact —
+    a plane is only demoted when every value round-trips — and planes
+    that feed arithmetic are re-widened inside the simulator body, so
+    simulation results are bit-identical to the int32 planes.
+    """
+    return {k: (lambda a: a.astype(_fit_dtype(a)))(np.asarray(getattr(cfg, k)))
+            for k in SIM_PLANES}
+
+
+def plane_dtypes(cfg: SimConfig) -> Dict[str, str]:
+    """The narrowed dtype chosen for each simulator plane (introspection;
+    derived from ``narrowed_planes`` so the two can never disagree)."""
+    return {k: str(v.dtype) for k, v in narrowed_planes(cfg).items()}
 
 
 class ConfigConflict(RuntimeError):

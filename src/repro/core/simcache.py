@@ -1,0 +1,107 @@
+"""Process-wide shape-bucketed cache of compiled simulator executables.
+
+The batched verification engine (``simulator.simulate_batch``) compiles one
+XLA executable per *shape signature* — ``(II, P, RF, bits, n_iters,
+n_cycles, batch)`` — not per call.  Verifying the six Table-I kernels plus
+the four DSL kernels across N seeds therefore triggers a handful of traces
+instead of one per ``verify`` call, and repeated verification sweeps (CI,
+architecture exploration) reuse the executables for the lifetime of the
+process, across every ``Toolchain`` and ``CompiledKernel`` instance.
+
+Two bucketing knobs cap retraces from near-miss shapes:
+
+  * ``bucket_batch`` rounds the batch (seed count) up to the next power of
+    two — padded rows are simulated and discarded by the caller;
+  * ``bucket_cycles`` rounds the cycle count up, keeping 4 significant
+    bits (<= 12.5%% padded cycles) — cycles past the schedule are dead by
+    construction: every STORE is gated by the control module's
+    iteration-validity window, so final memory is untouched.
+
+Both paddings preserve the bit-exactness contract pinned by
+``tests/test_batched_verify.py``.
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass
+from typing import Callable, Dict
+
+
+@dataclass(frozen=True)
+class SimSignature:
+    """Everything static that determines a batched-simulator executable."""
+    II: int
+    P: int
+    RF: int
+    bits: int
+    n_iters: int
+    n_cycles: int
+    batch: int
+
+
+def bucket_batch(batch: int) -> int:
+    """Round a batch size up to the next power of two (>= 1)."""
+    if batch <= 1:
+        return 1
+    return 1 << (batch - 1).bit_length()
+
+
+def bucket_cycles(n_cycles: int) -> int:
+    """Round a cycle count up to its 4-significant-bit bucket boundary.
+
+    Keeps at most 8 buckets per octave, so the padding overhead is bounded
+    by 12.5%% of simulated cycles while distinct ``n_cycles`` values (and
+    therefore traces) stay capped.
+    """
+    if n_cycles <= 8:
+        return max(1, n_cycles)
+    quantum = 1 << (n_cycles.bit_length() - 4)
+    return -(-n_cycles // quantum) * quantum
+
+
+class _Entry:
+    __slots__ = ("fn", "hits")
+
+    def __init__(self, fn: Callable):
+        self.fn = fn
+        self.hits = 0
+
+
+_lock = threading.Lock()
+_entries: Dict[SimSignature, _Entry] = {}
+_misses = 0
+
+
+def get(sig: SimSignature, build: Callable[[], Callable]) -> Callable:
+    """Return the cached executable for ``sig``, building it on first use.
+
+    ``build`` must return a callable closed over ``sig``'s static values;
+    it is invoked at most once per signature per process.
+    """
+    global _misses
+    with _lock:
+        entry = _entries.get(sig)
+        if entry is None:
+            entry = _Entry(build())
+            _entries[sig] = entry
+            _misses += 1
+        else:
+            entry.hits += 1
+        return entry.fn
+
+
+def stats() -> Dict[str, int]:
+    """Executable-cache counters: ``entries`` live signatures, ``hits``
+    calls served by an existing executable, ``misses`` builds."""
+    with _lock:
+        return {"entries": len(_entries),
+                "hits": sum(e.hits for e in _entries.values()),
+                "misses": _misses}
+
+
+def clear() -> None:
+    """Drop every cached executable (tests / memory pressure)."""
+    global _misses
+    with _lock:
+        _entries.clear()
+        _misses = 0

@@ -18,20 +18,47 @@ All PEs are vectorized; the cycle loop is a `lax.scan`; invocations (the
 host-driven outer loops) are a second `lax.scan` threading the memory
 image.  This is the component that makes verification fast enough to run
 in CI for every mapped kernel.
+
+Both entry points run one shared traced body with a leading batch axis of
+memory images (``simulate`` is the batch-of-one case):
+
+  * ``simulate`` — one memory image (the historical per-seed path);
+  * ``simulate_batch`` — many seeds / test vectors of the same compiled
+    kernel in a single XLA launch, with the batched image buffer donated.
+    Executables come from a process-wide shape-bucketed cache
+    (``repro.core.simcache``), so a verification fleet across many kernels
+    and seeds triggers a handful of traces, not one per call.
+
+The body is hand-batched rather than ``vmap``-ed, and shaped around what
+profiles as expensive on small CGRA configurations:
+
+  * the batch axis rides the PE dimension of every dense op, where it
+    amortizes per-op dispatch nearly for free;
+  * the memory image is a flat ``[batch*words]`` vector and stores scatter
+    only the (few) lanes whose slot holds a STORE opcode — XLA scatters
+    cost per *index*, so the historical all-P-lanes masked scatter paid
+    ~90% of its cost writing the scratch word;
+  * the operand / register-file / crossbar mux banks resolve in one
+    concatenated select chain over all ports instead of three chains.
+
+Configuration planes are dtype-narrowed (``config_gen.narrowed_planes``)
+before entering the traced body: the pre-tiled per-cycle streams shrink
+~4x, which is also what lets the tiling byte-cap admit longer simulations.
 """
 from __future__ import annotations
 
 import functools
-from typing import Dict, Optional, Tuple
+from typing import Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import simcache
 from .config_gen import (KIND_FUOUT, KIND_IMM, KIND_IN_E, KIND_IN_N,
                          KIND_IN_S, KIND_IN_W, KIND_LIREG, KIND_NONE,
                          KIND_REG, OPC, OPC_LOAD, OPC_NONE, OPC_PASS,
-                         OPC_STORE, SimConfig)
+                         OPC_STORE, SimConfig, narrowed_planes)
 from .dfg import Op
 
 # xo-port index a reader consults on its neighbour: OPP of (N,E,S,W)
@@ -39,7 +66,19 @@ _OPP_IDX = np.array([2, 3, 0, 1], dtype=np.int32)
 
 
 
+def _dp_dtype(bits: int):
+    """Datapath carrier dtype: a `bits`-wide two's-complement machine is
+    simulated natively in int16 when the widths coincide (integer overflow
+    in XLA HLO is defined as mod-2^n wraparound, which *is* the datapath's
+    wrap semantics, so the explicit `_wrap` becomes the identity and every
+    value/state/memory buffer halves); other widths keep int32 carriers
+    with explicit wrapping."""
+    return jnp.int16 if bits == 16 else jnp.int32
+
+
 def _wrap(x: jnp.ndarray, bits: int) -> jnp.ndarray:
+    if x.dtype == jnp.int16 and bits == 16:
+        return x  # int16 overflow already wraps mod 2^16
     half = 1 << (bits - 1)
     full = 1 << bits
     return ((x + half) & (full - 1)) - half
@@ -65,34 +104,147 @@ def _alu(opc: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray, c: jnp.ndarray,
     return _wrap(res, bits)
 
 
-def _as_jnp(cfg: SimConfig) -> Dict[str, jnp.ndarray]:
-    return {k: jnp.asarray(getattr(cfg, k)) for k in (
-        "op", "imm", "src_kind", "src_idx", "force_before", "force_val",
-        "xo_kind", "xo_idx", "rf_kind", "rf_idx", "mem_off", "mem_words",
-        "valid_start", "nbr_idx")}
-
-
 # configuration planes indexed by the II slot; pre-tiled to cycle streams
-# before the scan so the traced body does no `[t % II]` dynamic gathers
-_SLOT_PLANES = ("op", "imm", "src_kind", "src_idx", "force_before",
-                "force_val", "xo_kind", "xo_idx", "rf_kind", "rf_idx",
-                "mem_off", "mem_words", "valid_start")
+# before the scan so the traced body does no `[t % II]` dynamic gathers.
+# ``port_idx`` maps every mux port (operands + RF writes + crossbar
+# writes, [II,P,3+RF+4]) to its gather index into the flat start-of-cycle
+# state vector — the whole mux fabric resolves as one gather instead of a
+# per-kind select chain; ``rf_mask``/``xo_mask`` flag which write ports
+# are configured; ``store_lanes`` lists the (padded, -1-terminated) PE
+# indices whose slot holds a STORE, so the memory scatter touches only
+# lanes that can commit.
+_SLOT_PLANES = ("op", "imm", "port_idx", "rf_mask", "xo_mask",
+                "force_before", "force_val", "mem_off", "mem_words",
+                "valid_start", "store_lanes")
 
-# pre-tiling cap: beyond ~this many n_cycles*P elements per plane the tiled
-# streams would dominate memory (tens of MB), so long simulations fall back
-# to the per-cycle slot gather (identical numerics, O(II) config memory)
-_TILE_CYCLE_LIMIT = 1 << 20
+# pre-tiling cap in *bytes of tiled stream*: beyond this the tiled config
+# would dominate memory, so long simulations fall back to the per-cycle
+# slot gather (identical numerics, O(II) config memory).  The budget is
+# sized from the actual per-cycle footprint — every plane's inner dims
+# (e.g. kind_all is [P,3+RF+4]) times its (narrowed) item size — not the
+# bare n_cycles*P estimate, which undercounted the streams several-fold.
+_TILE_BYTES_LIMIT = 64 << 20
 
 
-@functools.partial(jax.jit, static_argnames=("II", "P", "RF", "bits",
-                                             "n_iters", "n_cycles",
-                                             "scratch"))
-def _run_invocations(c: Dict[str, jnp.ndarray], mem0: jnp.ndarray,
-                     li_stack: jnp.ndarray, *, II: int, P: int, RF: int,
-                     bits: int, n_iters: int, n_cycles: int,
-                     scratch: int) -> jnp.ndarray:
-    opp = jnp.asarray(_OPP_IDX)
-    pe_ar = jnp.arange(P)
+def _tile_bytes_per_cycle(c: Dict[str, jnp.ndarray]) -> int:
+    """Bytes of pre-tiled stream one simulated cycle costs: the sum over
+    slot planes of (elements per slot) x (narrowed item size)."""
+    return sum(int(np.prod(c[k].shape[1:])) * c[k].dtype.itemsize
+               for k in _SLOT_PLANES)
+
+
+def _state_layout(P: int, RF: int, LI: int):
+    """Section offsets of the flat per-cycle state vector the mux fabric
+    gathers from: [ xo (P*4) | regs (P*RF) | fu (P) | imm (P) |
+    li (P*LI) | zero (1) ] — the trailing cell is a constant 0 every
+    unconfigured (KIND_NONE) port reads."""
+    xo_off = 0
+    reg_off = xo_off + P * 4
+    fu_off = reg_off + P * RF
+    imm_off = fu_off + P
+    li_off = imm_off + P
+    zero_off = li_off + P * LI
+    return xo_off, reg_off, fu_off, imm_off, li_off, zero_off
+
+
+def _port_gather_idx(kind: np.ndarray, idx: np.ndarray, cfg: SimConfig,
+                     LI: int) -> np.ndarray:
+    """Host-side compilation of one mux bank ([II,P,K] kind/idx planes)
+    into flat state-vector gather indices — the per-kind select chain of
+    the mux fabric becomes pure data, so the traced body resolves every
+    port of every bank with a single gather."""
+    P, RF = cfg.P, cfg.RF
+    xo_off, reg_off, fu_off, imm_off, li_off, zero_off = \
+        _state_layout(P, RF, LI)
+    II, _, K = kind.shape
+    pe = np.arange(P)[None, :, None]
+    nbr = np.asarray(cfg.nbr_idx)                          # [P,4]
+    out = np.full(kind.shape, zero_off, dtype=np.int64)    # KIND_NONE -> 0
+    for d, kind_in in enumerate((KIND_IN_N, KIND_IN_E, KIND_IN_S,
+                                 KIND_IN_W)):
+        # inbound wire: neighbour's opposite-facing crossbar port
+        sel = kind == kind_in
+        val = nbr[:, d][None, :, None] * 4 + _OPP_IDX[d] + xo_off
+        out = np.where(sel, np.broadcast_to(val, kind.shape), out)
+    out = np.where(kind == KIND_REG,
+                   reg_off + pe * RF + np.clip(idx, 0, RF - 1), out)
+    out = np.where(kind == KIND_FUOUT, fu_off + pe, out)
+    out = np.where(kind == KIND_IMM, imm_off + pe, out)
+    out = np.where(kind == KIND_LIREG,
+                   li_off + pe * LI + np.clip(idx, 0, LI - 1), out)
+    return out.astype(np.int16 if zero_off <= np.iinfo(np.int16).max
+                      else np.int32)
+
+
+def _as_jnp(cfg: SimConfig) -> Dict[str, jnp.ndarray]:
+    """Device copies of the simulator's config planes, cached on the
+    SimConfig so repeated runs/verifies skip the host-side compilation and
+    the transfer.
+
+    Starting from the dtype-narrowed planes, the three mux banks are
+    compiled into one ``port_idx`` gather plane over the flat state
+    vector, write masks replace the RF/crossbar kind tests, and the
+    per-slot store-lane table is derived from the opcode plane (see
+    ``_SLOT_PLANES``).
+
+    The cache means a SimConfig is frozen once simulated — and that is
+    enforced: building the cache marks the numpy planes read-only, so a
+    later in-place edit raises instead of silently diverging from the
+    device copies.  Configs come out of ``generate_config``/``from_json``
+    and are never mutated by the flow; anyone editing one by hand (tests
+    injecting faults) must do so before the first run or delete
+    ``_jnp_planes`` and restore ``.flags.writeable``.
+    """
+    cached = getattr(cfg, "_jnp_planes", None)
+    if cached is None:
+        p = narrowed_planes(cfg)
+        II, P, LI = cfg.II, cfg.P, max(1, cfg.LI)
+        lanes = [np.nonzero(np.asarray(cfg.op)[s] == OPC_STORE)[0]
+                 for s in range(II)]
+        S = max(1, max((len(l) for l in lanes), default=0))
+        store_lanes = np.full((II, S), -1, dtype=np.int8 if P <= 127
+                              else np.int16)
+        for s, l in enumerate(lanes):
+            store_lanes[s, :len(l)] = l
+        kind_all = np.concatenate(
+            [p["src_kind"], p["rf_kind"], p["xo_kind"]], axis=2)
+        idx_all = np.concatenate(
+            [p["src_idx"], p["rf_idx"], p["xo_idx"]], axis=2)
+        planes = {
+            "op": p["op"], "imm": p["imm"],
+            "port_idx": _port_gather_idx(kind_all, idx_all, cfg, LI),
+            "rf_mask": np.asarray(p["rf_kind"]) != KIND_NONE,
+            "xo_mask": np.asarray(p["xo_kind"]) != KIND_NONE,
+            "force_before": p["force_before"], "force_val": p["force_val"],
+            "mem_off": p["mem_off"], "mem_words": p["mem_words"],
+            "valid_start": p["valid_start"], "store_lanes": store_lanes,
+        }
+        cached = {k: jnp.asarray(v) for k, v in planes.items()}
+        for k in SimConfig._ARRAY_DTYPES:
+            arr = getattr(cfg, k)
+            if isinstance(arr, np.ndarray):
+                arr.flags.writeable = False
+        cfg._jnp_planes = cached
+    return cached
+
+
+def _sim_body(c: Dict[str, jnp.ndarray], mem0: jnp.ndarray,
+              li_stack: jnp.ndarray, *, II: int, P: int, RF: int,
+              bits: int, n_iters: int, n_cycles: int) -> jnp.ndarray:
+    """A batch of memory images through all invocations in one launch.
+
+    ``mem0``: [batch, words] initial images (batch=1 is the sequential
+    path).  Per batch row the computation is op-for-op the classic
+    single-image simulation, so results are bit-identical per element;
+    batch and image size specialize from ``mem0``'s shape at trace time.
+    Address and time-window sums happen in int32 (the narrowed config
+    streams only carry the values).
+    """
+    B, W = mem0.shape
+    LI = li_stack.shape[-1]
+    dt = _dp_dtype(bits)
+    row_off = (jnp.arange(B) * W)[:, None]                # [B,1]
+    scratch = row_off + (W - 1)                           # [B,1] per-row
 
     # pre-tile the per-slot configuration into per-cycle streams: the scan
     # consumes them as xs, so XLA sees static slot schedules instead of a
@@ -100,9 +252,9 @@ def _run_invocations(c: Dict[str, jnp.ndarray], mem0: jnp.ndarray,
     # defeats scan-level constant propagation and costs a fused lookup per
     # cycle per plane).  One gather per plane here, outside the loop.
     # Tiling is O(n_cycles) memory, so very long simulations (bounded by
-    # _TILE_CYCLE_LIMIT total cycle-plane elements) keep the II-sized
+    # _TILE_BYTES_LIMIT total tiled-stream bytes) keep the II-sized
     # planes and gather per cycle instead.
-    pretile = n_cycles * P <= _TILE_CYCLE_LIMIT
+    pretile = n_cycles * _tile_bytes_per_cycle(c) <= _TILE_BYTES_LIMIT
     t_arr = jnp.arange(n_cycles)
     if pretile:
         slots = jnp.arange(n_cycles) % II
@@ -111,11 +263,15 @@ def _run_invocations(c: Dict[str, jnp.ndarray], mem0: jnp.ndarray,
         xs_cfg = {}
 
     def one_invocation(mem: jnp.ndarray, li: jnp.ndarray) -> Tuple[jnp.ndarray, int]:
-        regs0 = jnp.zeros((P, RF), dtype=jnp.int32)
-        xo0 = jnp.zeros((P, 4), dtype=jnp.int32)
-        fu0 = jnp.zeros((P,), dtype=jnp.int32)
-        ldp0 = jnp.zeros((P,), dtype=jnp.int32)
-        fl0 = jnp.zeros((P,), dtype=bool)
+        regs0 = jnp.zeros((B, P, RF), dtype=dt)
+        xo0 = jnp.zeros((B, P, 4), dtype=dt)
+        fu0 = jnp.zeros((B, P), dtype=dt)
+        ldp0 = jnp.zeros((B, P), dtype=dt)
+        fl0 = jnp.zeros((B, P), dtype=bool)
+        li_flat = jnp.broadcast_to(li.reshape(-1).astype(dt), (B, P * LI))
+        zero_cell = jnp.zeros((B, 1), dtype=dt)
+        state_len = P * (4 + RF + 2 + LI) + 1
+        state_row_off = (jnp.arange(B) * state_len)[:, None, None]  # [B,1,1]
 
         def cycle(carry, xs):
             regs, xo, fu, ldp, fl, mem = carry
@@ -124,54 +280,53 @@ def _run_invocations(c: Dict[str, jnp.ndarray], mem0: jnp.ndarray,
                 slot = t % II
                 ct = {k: c[k][slot] for k in _SLOT_PLANES}
             opc = ct["op"]
-            # inbound wires: what my neighbour's opposite-facing port holds
-            inp = xo[c["nbr_idx"], opp[None, :]]          # [P,4]
 
-            def resolve(kind, idx):
-                # kind/idx: [P, K] — all K mux ports of a bank resolve in
-                # one broadcasted select chain instead of one chain per port
-                v = jnp.zeros(kind.shape, dtype=jnp.int32)
-                v = jnp.where(kind == KIND_IN_N, inp[:, 0:1], v)
-                v = jnp.where(kind == KIND_IN_E, inp[:, 1:2], v)
-                v = jnp.where(kind == KIND_IN_S, inp[:, 2:3], v)
-                v = jnp.where(kind == KIND_IN_W, inp[:, 3:4], v)
-                v = jnp.where(kind == KIND_REG,
-                              regs[pe_ar[:, None], jnp.clip(idx, 0, RF - 1)],
-                              v)
-                v = jnp.where(kind == KIND_FUOUT, fu[:, None], v)
-                v = jnp.where(kind == KIND_IMM, ct["imm"][:, None], v)
-                v = jnp.where(kind == KIND_LIREG,
-                              li[pe_ar[:, None],
-                                 jnp.clip(idx, 0, li.shape[1] - 1)], v)
-                return v
+            # the whole mux fabric (operand + RF-write + crossbar-write
+            # ports) resolves as one flat 1D gather from the start-of-
+            # cycle state snapshot (layout: _state_layout; indices
+            # precompiled per slot by _port_gather_idx, offset per batch
+            # row here — flat scalar gathers are what XLA CPU does fast)
+            state = jnp.concatenate(
+                [xo.reshape(B, -1), regs.reshape(B, -1), fu,
+                 jnp.broadcast_to(ct["imm"].astype(dt)[None], (B, P)),
+                 li_flat, zero_cell], axis=1)             # [B,SL]
+            pidx = state_row_off + ct["port_idx"].astype(jnp.int32)
+            v = jnp.take(state.reshape(-1), pidx)         # [B,P,3+RF+4]
 
-            ops = resolve(ct["src_kind"], ct["src_idx"])       # [P,3]
+            ops = v[:, :, :3]                             # [B,P,3]
             ops = jnp.where(t < ct["force_before"], ct["force_val"], ops)
-            a, b, p3 = ops[:, 0], ops[:, 1], ops[:, 2]
+            a, b, p3 = ops[:, :, 0], ops[:, :, 1], ops[:, :, 2]
             res = _alu(opc, a, b, p3, bits)
 
-            # memory
-            gaddr = ct["mem_off"] + jnp.clip(a, 0, ct["mem_words"] - 1)
+            # memory: flat global addresses = row offset + bank offset +
+            # clipped bank-relative address; stores commit through only
+            # the lanes whose slot holds a STORE (XLA scatters cost per
+            # index), gated by the iteration-validity window — padded /
+            # gated-off lanes write the scratch word's own value back
+            mem_w = ct["mem_words"].astype(jnp.int32)
+            gaddr = row_off + ct["mem_off"].astype(jnp.int32) + \
+                jnp.clip(a, 0, mem_w - 1)                 # [B,P]
             loaded = jnp.take(mem, gaddr)
             is_load = opc == OPC_LOAD
             is_store = opc == OPC_STORE
-            vstart = ct["valid_start"]
-            gate = is_store & (t >= vstart) & (t < vstart + n_iters * II)
-            st_addr = jnp.where(gate, gaddr, scratch)
-            mem = mem.at[st_addr].set(jnp.where(gate, b, mem[scratch]))
+            vstart = ct["valid_start"].astype(jnp.int32)
+            window = is_store & (t >= vstart) & (t < vstart + n_iters * II)
+            sl = ct["store_lanes"]                        # [S], -1 padded
+            slc = jnp.clip(sl, 0, P - 1)
+            gate = window[slc] & (sl >= 0)                # [S]
+            st_addr = jnp.where(gate, gaddr[:, slc], scratch)
+            scr_val = jnp.take(mem, scratch)              # [B,1]
+            mem = mem.at[st_addr].set(jnp.where(gate, b[:, slc], scr_val))
 
             fu_next = jnp.where(fl, ldp,
                                 jnp.where((opc != OPC_NONE) & ~is_load
                                           & ~is_store, res, fu))
             ldp_next = jnp.where(is_load, loaded, ldp)
-            fl_next = is_load
+            fl_next = jnp.broadcast_to(is_load, (B, P))
 
-            # register-file and crossbar writes, each bank resolved as one
-            # [P, K] select from the same start-of-cycle snapshot
-            regs_next = jnp.where(ct["rf_kind"] != KIND_NONE,
-                                  resolve(ct["rf_kind"], ct["rf_idx"]), regs)
-            xo_next = jnp.where(ct["xo_kind"] != KIND_NONE,
-                                resolve(ct["xo_kind"], ct["xo_idx"]), xo)
+            # register-file and crossbar writes from the resolved ports
+            regs_next = jnp.where(ct["rf_mask"], v[:, :, 3:3 + RF], regs)
+            xo_next = jnp.where(ct["xo_mask"], v[:, :, 3 + RF:], xo)
 
             return (regs_next, xo_next, fu_next, ldp_next, fl_next, mem), 0
 
@@ -179,8 +334,42 @@ def _run_invocations(c: Dict[str, jnp.ndarray], mem0: jnp.ndarray,
         carry, _ = jax.lax.scan(cycle, carry, (t_arr, xs_cfg))
         return carry[-1], 0
 
-    mem, _ = jax.lax.scan(one_invocation, mem0, li_stack)
+    mem, _ = jax.lax.scan(one_invocation, mem0.reshape(B * W), li_stack)
+    return mem.reshape(B, W)
+
+
+_run_invocations = functools.partial(
+    jax.jit, static_argnames=("II", "P", "RF", "bits", "n_iters",
+                              "n_cycles"))(_sim_body)
+
+
+def _build_batched(sig: simcache.SimSignature):
+    """Compile-on-demand builder for one batched-simulator signature,
+    jitted with the batched image buffer donated so per-seed images are
+    updated in place.  Buffer donation is a device-memory optimization XLA
+    only implements off-CPU, so it is skipped on the CPU backend (where it
+    would just warn)."""
+    body = functools.partial(_sim_body, II=sig.II, P=sig.P, RF=sig.RF,
+                             bits=sig.bits, n_iters=sig.n_iters,
+                             n_cycles=sig.n_cycles)
+    donate = (1,) if jax.default_backend() != "cpu" else ()
+    return jax.jit(body, donate_argnums=donate)
+
+
+def _banks_to_mem(cfg: SimConfig, banks: Dict[str, np.ndarray]) -> np.ndarray:
+    mem = np.zeros(cfg.total_words,
+                   dtype=np.int16 if cfg.bits == 16 else np.int32)
+    for i in range(len(cfg.bank_offsets)):
+        img = banks[f"bank{i}"]
+        mem[cfg.bank_offsets[i]:cfg.bank_offsets[i] + len(img)] = img
     return mem
+
+
+def _mem_to_banks(cfg: SimConfig, mem: np.ndarray,
+                  banks: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
+    return {f"bank{i}": mem[cfg.bank_offsets[i]:
+                            cfg.bank_offsets[i] + len(banks[f"bank{i}"])]
+            for i in range(len(cfg.bank_offsets))}
 
 
 def simulate(cfg: SimConfig, banks: Dict[str, np.ndarray],
@@ -191,22 +380,49 @@ def simulate(cfg: SimConfig, banks: Dict[str, np.ndarray],
     banks: {"bank<i>": int array} initial memory images.
     invocations: list of {livein name: value} dicts (host outer loops).
     """
-    n_banks = len(cfg.bank_offsets)
-    mem = np.zeros(cfg.total_words, dtype=np.int32)
-    for i in range(n_banks):
-        img = banks[f"bank{i}"]
-        mem[cfg.bank_offsets[i]:cfg.bank_offsets[i] + len(img)] = img
+    mem = _banks_to_mem(cfg, banks)
+    if not len(invocations):
+        # nothing to run: the final image is the initial image
+        return _mem_to_banks(cfg, mem, banks)
 
     li_stack = np.stack([cfg.livein_array(inv) for inv in invocations])
     out = _run_invocations(
-        _as_jnp(cfg), jnp.asarray(mem), jnp.asarray(li_stack),
+        _as_jnp(cfg), jnp.asarray(mem[None, :]), jnp.asarray(li_stack),
         II=cfg.II, P=cfg.P, RF=cfg.RF, bits=cfg.bits,
-        n_iters=n_iters, n_cycles=cfg.n_cycles(n_iters),
-        scratch=cfg.total_words - 1)
-    out = np.asarray(out)
+        n_iters=n_iters, n_cycles=cfg.n_cycles(n_iters))
+    return _mem_to_banks(cfg, np.asarray(out)[0], banks)
 
-    result = {}
-    for i in range(n_banks):
-        w = len(banks[f"bank{i}"])
-        result[f"bank{i}"] = out[cfg.bank_offsets[i]:cfg.bank_offsets[i] + w]
-    return result
+
+def simulate_batch(cfg: SimConfig, banks_batch: List[Dict[str, np.ndarray]],
+                   invocations, n_iters: int) -> List[Dict[str, np.ndarray]]:
+    """Run the same mapped kernel over a batch of initial memory images.
+
+    All images share one configuration and invocation schedule (the batch
+    axis is seeds / test vectors, not kernels), so the whole batch is one
+    batched XLA launch: per-element results are bit-identical to
+    ``simulate`` on that element.  The executable comes from the process-
+    wide shape-bucketed cache (``repro.core.simcache``): batch is rounded
+    up to a power of two (padded images are simulated and dropped) and the
+    cycle count to its bucket boundary (padded cycles are store-gated
+    no-ops), so sweeps across many kernels and seed counts retrace XLA a
+    handful of times instead of once per call.
+    """
+    B = len(banks_batch)
+    if B == 0:
+        return []
+    mem = np.stack([_banks_to_mem(cfg, banks) for banks in banks_batch])
+    if not len(invocations):
+        return [_mem_to_banks(cfg, mem[i], banks_batch[i]) for i in range(B)]
+
+    li_stack = np.stack([cfg.livein_array(inv) for inv in invocations])
+    sig = simcache.SimSignature(
+        II=cfg.II, P=cfg.P, RF=cfg.RF, bits=cfg.bits, n_iters=n_iters,
+        n_cycles=simcache.bucket_cycles(cfg.n_cycles(n_iters)),
+        batch=simcache.bucket_batch(B))
+    if sig.batch > B:  # pad to the bucket; padded rows are masked out below
+        mem = np.concatenate(
+            [mem, np.repeat(mem[-1:], sig.batch - B, axis=0)])
+    fn = simcache.get(sig, lambda: _build_batched(sig))
+    out = np.asarray(fn(_as_jnp(cfg), jnp.asarray(mem),
+                        jnp.asarray(li_stack)))
+    return [_mem_to_banks(cfg, out[i], banks_batch[i]) for i in range(B)]

@@ -35,7 +35,7 @@ import os
 import tempfile
 import threading
 from dataclasses import dataclass
-from typing import Dict, Iterable, List, Optional
+from typing import Dict, Iterable, List, Optional, Sequence
 
 import numpy as np
 
@@ -142,12 +142,27 @@ class CompiledKernel:
         """Cycles per invocation (fill + steady state + drain)."""
         return self.mapping.schedule_len(self.mapped_iters)
 
+    def liveout_banks(self) -> List[str]:
+        """The bank arrays any STORE node writes — the only memory the
+        simulation can change, hence the only words verification compares."""
+        from .dfg import Op
+        return sorted({n.array for n in self.dfg.nodes.values()
+                       if n.op == Op.STORE})
+
     # ------------------------------------------------------------ execution
     def run(self, init_banks: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
         """Cycle-accurately simulate all invocations; returns final banks."""
         from .simulator import simulate
         return simulate(self.cfg, init_banks, self.invocations,
                         self.mapped_iters)
+
+    def run_batch(self, init_banks_batch: List[Dict[str, np.ndarray]]
+                  ) -> List[Dict[str, np.ndarray]]:
+        """Simulate a batch of initial images (seeds / test vectors) in one
+        vmapped launch; element i is bit-identical to ``run`` on it."""
+        from .simulator import simulate_batch
+        return simulate_batch(self.cfg, init_banks_batch, self.invocations,
+                              self.mapped_iters)
 
     def random_banks(self, seed: int = 0) -> Dict[str, np.ndarray]:
         """Deterministic random bank images over the target's banks — the
@@ -190,6 +205,58 @@ class CompiledKernel:
                     f"{self.name} (II={self.II}): simulation mismatch in "
                     f"{bank} at words {bad.tolist()}: got {got[bad]}, "
                     f"want {exp[bad]}")
+        return self
+
+    def verify_batch(self, seeds: Sequence[int] = (0,),
+                     check_dfg: bool = True) -> "CompiledKernel":
+        """Paper IV-C verification over many seeds in one batched pass.
+
+        All test vectors are generated up front, the DFG oracle runs once
+        vectorized over the seed axis, and the cycle-accurate simulation is
+        a single vmapped XLA launch through the process-wide executable
+        cache — with results bit-identical to per-seed ``verify`` (pinned
+        by the golden-equivalence tests).  Live-out banks (the ones STORE
+        nodes target) are compared word-for-word against the oracle;
+        every other bank is pinned to its initial image, so a miscompiled
+        store straying into an input-only bank still fails.  Raises
+        AssertionError naming the first offending (seed, bank, words);
+        returns self on success.
+        """
+        seeds = list(seeds)
+        if not seeds:
+            return self
+        if self.spec is not None:
+            from .verify import (check_dfg_semantics_batch,
+                                 generate_test_data_batch)
+            data = generate_test_data_batch(self.spec, seeds)
+            if check_dfg:
+                check_dfg_semantics_batch(self.spec, data)
+            init_batch = [data.init_row(i) for i in range(len(seeds))]
+            expected = data.expected_banks
+        else:
+            from .verify import reference_banks_batch
+            init_batch = [self.random_banks(s) for s in seeds]
+            expected = reference_banks_batch(
+                self.dfg,
+                {k: np.stack([ib[k] for ib in init_batch])
+                 for k in init_batch[0]},
+                self.invocations, self.mapped_iters,
+                self.arch.datapath_bits)
+        finals = self.run_batch(init_batch)
+        live = set(self.liveout_banks())
+        for i, (seed, final) in enumerate(zip(seeds, finals)):
+            for bank in sorted(final):
+                got = np.asarray(final[bank])
+                # non-liveout banks have no oracle data to compare; they
+                # must simply come back untouched
+                exp = np.asarray(expected[bank][i] if bank in live
+                                 else init_batch[i][bank])
+                if not np.array_equal(got, exp):
+                    bad = np.nonzero(got != exp)[0][:8]
+                    raise AssertionError(
+                        f"{self.name} (II={self.II}, seed={seed}): batched "
+                        f"simulation mismatch in {bank} at words "
+                        f"{bad.tolist()}: got {got[bad]}, want {exp[bad]}")
         return self
 
     # --------------------------------------------------------- serialization
@@ -416,6 +483,32 @@ class Toolchain:
             mapping = map_kernel_opts(spec.dfg, spec.arch, spec.layout, opt)
             finish(key, idxs, mapping, generate_config(mapping, spec.layout))
         return results
+
+    def verify_many(self, kernels: Iterable, seeds: Sequence[int] = (0,),
+                    check_dfg: bool = True,
+                    jobs: Optional[int] = None) -> List[CompiledKernel]:
+        """Batch-verify many kernels over many seeds — the verification-
+        fleet entry point.
+
+        ``kernels`` may mix :class:`CompiledKernel` artifacts, specs and
+        arch-deferred frontend programs; anything uncompiled goes through
+        ``compile_many`` first.  Each kernel then verifies every seed in
+        one ``verify_batch`` pass, sharing the process-wide simulator
+        executable cache, so the whole sweep costs a handful of XLA traces.
+        Raises AssertionError on the first mismatch; returns the compiled
+        kernels in input order.
+        """
+        items = list(kernels)
+        compiled: List[Optional[CompiledKernel]] = [
+            k if isinstance(k, CompiledKernel) else None for k in items]
+        todo = [k for k, ck in zip(items, compiled) if ck is None]
+        if todo:
+            done = iter(self.compile_many(todo, jobs=jobs))
+            compiled = [ck if ck is not None else next(done)
+                        for ck in compiled]
+        for ck in compiled:
+            ck.verify_batch(seeds, check_dfg=check_dfg)
+        return compiled
 
 
 _default: Optional[Toolchain] = None

@@ -23,7 +23,7 @@ from __future__ import annotations
 
 import warnings
 from dataclasses import dataclass
-from typing import Dict, Optional
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -38,11 +38,44 @@ class TestData:
     expected_banks: Dict[str, np.ndarray]
 
 
+@dataclass
+class TestDataBatch:
+    """All test vectors of one batched verification up front: bank images
+    stacked along a leading seed axis, one row per seed."""
+    seeds: List[int]
+    init_banks: Dict[str, np.ndarray]       # [batch, words]
+    expected_banks: Dict[str, np.ndarray]   # [batch, words]
+
+    def init_row(self, i: int) -> Dict[str, np.ndarray]:
+        return {k: v[i] for k, v in self.init_banks.items()}
+
+
 def generate_test_data(spec: KernelSpec, seed: int = 0) -> TestData:
     rng = np.random.default_rng(seed)
     init = spec.init_banks(rng)
     expected = spec.golden(init)
     return TestData(init_banks=init, expected_banks=expected)
+
+
+def generate_test_data_batch(spec: KernelSpec,
+                             seeds: Sequence[int]) -> TestDataBatch:
+    """Test vectors for every seed, stacked for the batched engine.
+
+    Each row is drawn from that seed's own rng stream — bit-identical to
+    ``generate_test_data(spec, seed)`` — so batched and sequential verify
+    see the very same images; the numpy golden models are cheap, it is the
+    DFG oracle and the simulator that are batch-vectorized downstream.
+    """
+    if not len(seeds):
+        return TestDataBatch(seeds=[], init_banks={}, expected_banks={})
+    datas = [generate_test_data(spec, s) for s in seeds]
+    names = list(datas[0].init_banks)
+    return TestDataBatch(
+        seeds=list(seeds),
+        init_banks={k: np.stack([np.asarray(d.init_banks[k])
+                                 for d in datas]) for k in names},
+        expected_banks={k: np.stack([np.asarray(d.expected_banks[k])
+                                     for d in datas]) for k in names})
 
 
 def reference_banks(dfg, init_banks, invocations, mapped_iters: int,
@@ -56,6 +89,27 @@ def reference_banks(dfg, init_banks, invocations, mapped_iters: int,
     return banks
 
 
+def reference_banks_batch(dfg, init_banks, invocations, mapped_iters: int,
+                          bits: int) -> Dict[str, np.ndarray]:
+    """``reference_banks`` vectorized over the leading seed axis of
+    ``init_banks`` ([batch, words] per bank) — one oracle pass for the
+    whole batch and invocation sweep instead of one per (seed,
+    invocation), so the oracle does not become the bottleneck of batched
+    verification.  The heavy lifting runs on the JAX-lowered DFG executor
+    (``repro.core.refexec``); ``DFG.reference_execute_batch`` is its
+    bit-identical numpy reference (pinned by tests) and the fallback
+    wherever JAX is unavailable."""
+    try:
+        from .refexec import reference_execute_jax
+    except ImportError:
+        return dfg.reference_execute_batch(
+            mapped_iters, {k: np.asarray(v, dtype=np.int64)
+                           for k, v in init_banks.items()},
+            invocations, bits=bits)
+    return reference_execute_jax(dfg, mapped_iters, init_banks,
+                                 invocations, bits=bits)
+
+
 def check_dfg_semantics(spec: KernelSpec, data: TestData) -> None:
     """Step 2: sequential DFG execution must match the golden model."""
     banks = reference_banks(spec.dfg, data.init_banks, spec.invocations,
@@ -67,6 +121,23 @@ def check_dfg_semantics(spec: KernelSpec, data: TestData) -> None:
             raise AssertionError(
                 f"{spec.name}: DFG reference mismatch in {name} at words "
                 f"{bad.tolist()}: got {got[bad]}, want {np.asarray(exp)[bad]}")
+
+
+def check_dfg_semantics_batch(spec: KernelSpec, data: TestDataBatch) -> None:
+    """Step 2 over a whole seed batch in one vectorized oracle pass."""
+    banks = reference_banks_batch(spec.dfg, data.init_banks,
+                                  spec.invocations, spec.mapped_iters,
+                                  spec.arch.datapath_bits)
+    for name, exp in data.expected_banks.items():
+        got = np.asarray(banks[name])
+        exp = np.asarray(exp)
+        if not np.array_equal(got, exp):
+            row = int(np.nonzero(got != exp)[0][0])
+            bad = np.nonzero(got[row] != exp[row])[0][:8]
+            raise AssertionError(
+                f"{spec.name}: DFG reference mismatch for seed "
+                f"{data.seeds[row]} in {name} at words {bad.tolist()}: "
+                f"got {got[row][bad]}, want {exp[row][bad]}")
 
 
 def verify_mapping(spec: KernelSpec, mapping: Optional[Mapping] = None,

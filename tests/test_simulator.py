@@ -41,3 +41,75 @@ def test_config_serializes(tc):
     cfg = tc.compile(spec).cfg
     s = cfg.to_json()
     assert len(s) > 100 and '"II"' in s
+
+
+def test_config_serializes_after_simulation(tc):
+    """The simulator caches device-resident planes on the SimConfig; the
+    artifact JSON must stay free of those transients."""
+    import json
+    spec = build_gemm(TI=4, TK=4, TJ=4, unroll=1)
+    ck = tc.compile(spec)
+    ck.verify()                      # populates the plane cache
+    d = json.loads(ck.cfg.to_json())
+    assert not [k for k in d if k.startswith("_")]
+
+
+def test_empty_invocations_returns_initial_banks(tc):
+    """A kernel invoked zero times leaves memory untouched (regression:
+    np.stack([]) used to raise before the guard)."""
+    from repro.core.simulator import simulate, simulate_batch
+    spec = build_gemm(TI=4, TK=4, TJ=4, unroll=1)
+    ck = tc.compile(spec)
+    data = generate_test_data(spec, seed=0)
+    out = simulate(ck.cfg, data.init_banks, [], spec.mapped_iters)
+    for bank, img in data.init_banks.items():
+        np.testing.assert_array_equal(out[bank], img)
+    outs = simulate_batch(ck.cfg, [data.init_banks] * 2, [],
+                          spec.mapped_iters)
+    for out in outs:
+        for bank, img in data.init_banks.items():
+            np.testing.assert_array_equal(out[bank], img)
+
+
+def test_tile_budget_counts_every_plane_element(tc):
+    """The pre-tiling cap is sized from the actual per-cycle stream
+    footprint — every plane's inner dims and narrowed item size — not the
+    bare P-words-per-cycle estimate that undercounted wide planes like
+    the [P,3+RF+4] mux bank several-fold."""
+    from repro.core.simulator import (_SLOT_PLANES, _as_jnp,
+                                      _tile_bytes_per_cycle)
+    cfg = tc.compile(build_gemm(TI=4, TK=4, TJ=4, unroll=1)).cfg
+    planes = _as_jnp(cfg)
+    per_cycle = _tile_bytes_per_cycle(planes)
+    manual = sum(int(np.prod(planes[k].shape[1:])) * planes[k].dtype.itemsize
+                 for k in _SLOT_PLANES)
+    assert per_cycle == manual
+    # the mux-port plane alone is [P, 3+RF+4] — wider than the old
+    # one-word-per-PE accounting by an order of magnitude
+    assert per_cycle >= cfg.P * (3 + cfg.RF + 4)
+
+
+def test_plane_dtypes_narrow_exactly(tc):
+    """Dtype narrowing is value-exact: every plane demotes to the smallest
+    of int8/int16/int32 that round-trips its values."""
+    from repro.core.config_gen import SIM_PLANES, narrowed_planes, plane_dtypes
+    cfg = tc.compile(build_gemm(TI=4, TK=4, TJ=4, unroll=1)).cfg
+    narrowed = narrowed_planes(cfg)
+    dtypes = plane_dtypes(cfg)
+    assert set(dtypes) == set(SIM_PLANES)
+    for k in SIM_PLANES:
+        orig = np.asarray(getattr(cfg, k))
+        assert str(narrowed[k].dtype) == dtypes[k]
+        np.testing.assert_array_equal(narrowed[k], orig)   # value-exact
+    # enumeration planes (opcodes, mux kinds) always fit a byte
+    assert dtypes["op"] == "int8" and dtypes["src_kind"] == "int8"
+
+
+def test_config_frozen_after_first_simulation(tc):
+    """Simulating caches device planes on the config; in-place plane edits
+    afterwards must raise rather than silently diverge from the cache."""
+    spec = build_gemm(TI=4, TK=4, TJ=4, unroll=1)
+    ck = tc.compile(spec)
+    ck.verify()
+    with pytest.raises(ValueError):
+        ck.cfg.imm[:] = ck.cfg.imm + 1
