@@ -10,6 +10,10 @@
                      set (the content-addressed artifact cache)
   verify_batched  -- per-seed sequential verify vs the batched verification
                      engine (vmapped multi-seed simulation) at batch=8
+  dse_sweep       -- tiny design-space sweep (repro.dse): 4 architecture
+                     variants x the ten-kernel library; rows are modeled
+                     suite latency per variant (deterministic), so the
+                     regression gate tracks mapper/cost-model quality
 
 Each benchmark prints ``name,us_per_call,derived`` CSV rows *and* returns
 machine-readable rows; ``main`` writes one ``BENCH_<name>.json`` artifact
@@ -268,6 +272,30 @@ def bench_frontend_trace() -> List[Dict]:
         shutil.rmtree(cache, ignore_errors=True)
 
 
+def bench_dse_sweep() -> List[Dict]:
+    """Tiny design-space sweep end to end: every ``tiny`` architecture
+    variant compiles + verifies the ten-kernel library and is scored by
+    the cost model.  Rows carry modeled (deterministic) latency, so the
+    regression comparator gates mapping quality rather than wall clock;
+    the sweep wall time is printed for the log only."""
+    from repro.core.mapper import MapperOptions
+    from repro.core.toolchain import Toolchain
+    from repro.dse import get_space, run_sweep, sweep_bench_rows
+
+    cache = tempfile.mkdtemp(prefix="morpher-dse-bench-")
+    try:
+        tc = Toolchain(options=MapperOptions(ii_max=20), cache_dir=cache)
+        t0 = time.time()
+        results = run_sweep(get_space("tiny"), toolchain=tc)
+        print(f"# tiny sweep wall time {time.time() - t0:.1f}s "
+              f"({len(results)} variants)")
+        rows = sweep_bench_rows(results)
+        _print_rows(rows)
+        return rows
+    finally:
+        shutil.rmtree(cache, ignore_errors=True)
+
+
 BENCHES = {
     "table1": ("Table I (paper reproduction)", bench_table1),
     "frontend_trace": ("frontend DSL tracing overhead (vs warm compile)",
@@ -281,6 +309,8 @@ BENCHES = {
                         bench_toolchain_cache),
     "verify_batched": ("batched vs sequential verification throughput",
                        bench_verify_batched),
+    "dse_sweep": ("tiny design-space sweep (repro.dse, modeled latency)",
+                  bench_dse_sweep),
 }
 
 
@@ -308,12 +338,17 @@ def check_regression(before: str, after: str, tol: float = 0.15) -> int:
     failed = []
     for name in sorted(set(b_rows) | set(a_rows)):
         if name not in b_rows:
-            print(f"NEW       {name}: {a_rows[name]['us']:.0f}us")
+            print(f"NEW       {name}: {a_rows[name]['us']}us")
             continue
         if name not in a_rows:
-            print(f"REMOVED   {name} (was {b_rows[name]['us']:.0f}us)")
+            print(f"REMOVED   {name} (was {b_rows[name]['us']}us)")
             continue
         b_us, a_us = b_rows[name]["us"], a_rows[name]["us"]
+        if b_us is None or a_us is None:
+            # informational rows (e.g. an unmapped table1 kernel) carry
+            # no duration; report, never gate
+            print(f"{'n/a':9s} {name}: {b_us}us -> {a_us}us")
+            continue
         rel = (a_us - b_us) / b_us if b_us else 0.0
         verdict = "REGRESSED" if rel > tol else "ok"
         print(f"{verdict:9s} {name}: {b_us:.0f}us -> {a_us:.0f}us "

@@ -57,8 +57,8 @@ def main():
     px, py = layout.placements["X"], layout.placements["Y"]
 
     def init_banks(rng):
-        banks = {f"bank{i}": np.zeros(w, dtype=np.int64)
-                 for i, w in enumerate(layout.bank_image_size())}
+        banks = {f"bank{bid}": np.zeros(w, dtype=np.int64)
+                 for bid, w in layout.bank_image_size().items()}
         banks[px.bank_array][px.base:px.base + N] = rng.integers(-99, 99, N)
         return banks
 

@@ -109,11 +109,31 @@ class CGRAArch:
             s.update(b.pes)
         return frozenset(s)
 
+    def bank(self, bank_id: int) -> MemBank:
+        """The bank with ``MemBank.id == bank_id``.  Banks are identified by
+        their declared id everywhere (layout placements, ``bank<id>`` memory
+        images, mapper bus constraints), never by list position — a user ADL
+        may declare banks in any order.
+
+        The id map is memoized against the identity of ``self.banks`` (the
+        mapper calls this in placement inner loops); rebinding the list —
+        how tests and programmatic edits mutate an arch — invalidates it.
+        """
+        cached = self.__dict__.get("_bank_by_id")
+        if cached is None or cached[0] is not self.banks:
+            cached = (self.banks, {b.id: b for b in self.banks})
+            self.__dict__["_bank_by_id"] = cached
+        try:
+            return cached[1][bank_id]
+        except KeyError:
+            raise KeyError(f"{self.name}: no memory bank with id "
+                           f"{bank_id}") from None
+
     def banks_of_pe(self, p: int) -> List[int]:
         return [b.id for b in self.banks if p in b.pes]
 
     def pes_of_bank(self, bank_id: int) -> Tuple[int, ...]:
-        return self.banks[bank_id].pes
+        return self.bank(bank_id).pes
 
     def supports(self, p: int, op: Op) -> bool:
         ops = self.per_pe_ops.get(p, self.fu_ops)
@@ -132,13 +152,20 @@ class CGRAArch:
 
     @staticmethod
     def from_json(s: str) -> "CGRAArch":
+        """Deserialize (and validate) an ADL JSON architecture.
+
+        Validation happens here so malformed user ADL files
+        (``edge_deploy.py --arch-file``, DSE inputs) fail loudly at load
+        time instead of flowing into the mapper as opaque errors."""
         d = json.loads(s)
         banks = [MemBank(b["id"], b["size_bytes"], tuple(b["pes"]))
                  for b in d.pop("banks")]
         d["fu_ops"] = frozenset(d["fu_ops"])
         d["per_pe_ops"] = {int(k): frozenset(v)
                            for k, v in d.pop("per_pe_ops", {}).items()}
-        return CGRAArch(banks=banks, **d)
+        arch = CGRAArch(banks=banks, **d)
+        arch.validate()
+        return arch
 
     def validate(self) -> None:
         """Raises ValueError on an inconsistent architecture (real errors,
@@ -147,7 +174,12 @@ class CGRAArch:
         if self.rows <= 0 or self.cols <= 0:
             raise ValueError(f"{self.name}: grid {self.rows}x{self.cols} "
                              f"must be positive")
+        seen_ids: set = set()
         for b in self.banks:
+            if b.id in seen_ids:
+                raise ValueError(f"{self.name}: duplicate memory bank id "
+                                 f"{b.id}")
+            seen_ids.add(b.id)
             for p in b.pes:
                 if not 0 <= p < self.n_pes:
                     raise ValueError(f"{self.name}: bank {b.id} references "
@@ -155,6 +187,17 @@ class CGRAArch:
         if self.regfile_size < 1 or self.livein_regs < 0:
             raise ValueError(f"{self.name}: regfile_size must be >= 1 and "
                              f"livein_regs >= 0")
+        for ci, cluster in enumerate(self.clusters):
+            for p in cluster:
+                if not 0 <= p < self.n_pes:
+                    raise ValueError(
+                        f"{self.name}: cluster {ci} references PE {p} "
+                        f"outside the {self.n_pes}-PE grid")
+        for p in self.per_pe_ops:
+            if not 0 <= p < self.n_pes:
+                raise ValueError(
+                    f"{self.name}: per_pe_ops references PE {p} outside "
+                    f"the {self.n_pes}-PE grid")
 
 
 # ----------------------------------------------------------- stock designs

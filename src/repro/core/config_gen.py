@@ -61,7 +61,7 @@ class SimConfig:
     valid_start: np.ndarray   # [II,P]  absolute schedule time of the node
     nbr_idx: np.ndarray       # [P,4]   pe index of neighbour in DIRS order
     nbr_ok: np.ndarray        # [P,4]
-    bank_offsets: List[int]
+    bank_offsets: Dict[int, int]  # bank id -> global word offset
     total_words: int          # incl. trailing scratch word
     depth: int
     lireg_assign: Dict[str, Tuple[int, int]] = field(default_factory=dict)
@@ -97,6 +97,9 @@ class SimConfig:
             d[k] = np.asarray(d[k], dtype=dt)
         d["lireg_assign"] = {name: tuple(v)
                              for name, v in d["lireg_assign"].items()}
+        # JSON object keys are strings; bank ids are ints
+        d["bank_offsets"] = {int(k): v
+                             for k, v in d["bank_offsets"].items()}
         return SimConfig(**d)
 
 
@@ -166,10 +169,12 @@ def generate_config(mapping: Mapping, layout: DataLayout) -> SimConfig:
     mem_words = np.ones((II, P), dtype=np.int32)
     valid_start = np.zeros((II, P), dtype=np.int32)
 
-    bank_offsets: List[int] = []
+    # global memory image: banks concatenated in declaration order, each
+    # addressed by its declared id
+    bank_offsets: Dict[int, int] = {}
     off = 0
     for b in arch.banks:
-        bank_offsets.append(off)
+        bank_offsets[b.id] = off
         off += b.words
     total_words = off + 1  # + scratch word for masked stores
     scratch = total_words - 1
@@ -241,7 +246,7 @@ def generate_config(mapping: Mapping, layout: DataLayout) -> SimConfig:
         if n.is_mem:
             b = mapping.bank_of[vid]
             mem_off[slot, pe] = bank_offsets[b]
-            mem_words[slot, pe] = arch.banks[b].words
+            mem_words[slot, pe] = arch.bank(b).words
 
     # ------------------------------------------------- routes -> mux configs
     for (src, dst, oslot), route in mapping.routes.items():

@@ -11,9 +11,14 @@ Fully-specified first-principles model (the paper's own constants):
 
 Formulas (documented in EXPERIMENTS.md - Table I):
   cycles/invocation = (n_iters - 1) * II + depth         (fill + steady + drain)
-  compute_time      = invocations_per_cluster * cycles/inv / f_clk
+  compute_time      = ceil(invocations / clusters) * cycles/inv / f_clk
   transfer_time     = (array_bytes + livein_bytes) / BW + handshake * invocations
   total             = compute + transfer  (sequential host<->CGRA, worst case)
+
+``clusters`` models data-parallel execution across the target's logical
+clusters (the paper's 8x8 = 4 clusters of 4x4): invocations are divided
+round-robin across clusters, so compute time shrinks by ~clusters while
+transfer and handshake stay whole-problem (the host link is shared).
 
 Utilization follows the paper's definition: DFG nodes per II across the
 PE array = nodes / (n_pes * II).
@@ -47,6 +52,7 @@ class KernelCost:
     total_ms: float
     speedup: float = 1.0
     mii_parts: Dict[str, int] = field(default_factory=dict)
+    clusters: int = 1
 
     def row(self) -> str:
         return (f"{self.name:<12} {self.nodes:>5} {self.II:>3} ({self.mii})"
@@ -60,17 +66,33 @@ def kernel_cost(spec: KernelSpec, mapping: Mapping, *,
                 array_bytes_moved: float = 0.0,
                 handshake_us: float = 0.0,
                 clusters: int = 1) -> KernelCost:
-    """Cost of executing the full problem (problem_scale sequential tile
-    steps of this kernel per cluster) on `clusters` data-parallel clusters.
+    """Cost of executing the full problem on `clusters` data-parallel
+    copies of this kernel's mapping (one per logical cluster).
 
-    array_bytes_moved: total off-chip<->on-chip array traffic for the whole
-    problem (per cluster schedule, already accounting for reuse).
+    ``invocations = len(spec.invocations) * problem_scale`` is the
+    whole-problem invocation count; compute time is divided across
+    clusters — the slowest cluster runs ``ceil(invocations / clusters)``
+    of them — while array transfer and per-invocation handshakes stay
+    whole-problem (the host<->CGRA link and the invoking host loop are
+    shared by all clusters).
+
+    Do not divide twice: callers that pre-scale ``problem_scale`` to
+    per-cluster tile steps (the Table-I harness, whose PROBLEM_SCALE is
+    ``Co / clusters``) must keep ``clusters=1``.  Likewise a mapping that
+    already spans the whole multi-cluster fabric is one configured
+    instance — score it with ``clusters=1`` (as the DSE sweep does).
+
+    array_bytes_moved: total off-chip<->on-chip array traffic for the
+    whole problem (already accounting for reuse).
     """
+    if clusters < 1:
+        raise ValueError(f"clusters must be >= 1, got {clusters}")
     II, depth = mapping.II, mapping.depth
     n_inv = len(spec.invocations) * problem_scale
     iters = spec.mapped_iters
     cyc_inv = (iters - 1) * II + depth
-    compute_s = n_inv * cyc_inv / F_CLK_HZ
+    inv_slowest_cluster = -(-n_inv // clusters)
+    compute_s = inv_slowest_cluster * cyc_inv / F_CLK_HZ
 
     livein_bytes = (spec.meta.get("liveins_per_inv", 0) * WORD_BYTES * n_inv)
     transfer_s = ((array_bytes_moved + livein_bytes) / LINK_BYTES_PER_S
@@ -84,6 +106,7 @@ def kernel_cost(spec: KernelSpec, mapping: Mapping, *,
         compute_ms=compute_s * 1e3, transfer_ms=transfer_s * 1e3,
         total_ms=(compute_s + transfer_s) * 1e3,
         mii_parts=dict(mapping.mii_parts),
+        clusters=clusters,
     )
 
 

@@ -63,8 +63,8 @@ class KernelSpec:
 
 
 def _bank_arrays(layout: DataLayout) -> Dict[str, np.ndarray]:
-    return {f"bank{i}": np.zeros(w, dtype=np.int64)
-            for i, w in enumerate(layout.bank_image_size())}
+    return {f"bank{bid}": np.zeros(w, dtype=np.int64)
+            for bid, w in layout.bank_image_size().items()}
 
 
 def _wrap16(x: np.ndarray) -> np.ndarray:
@@ -296,15 +296,19 @@ def build_conv(OH: int = 62, OW: int = 62, K: int = 3,
 
 
 # ----------------------------------------------------------------- registry
-def table1_kernels(small: bool = False) -> Dict[str, KernelSpec]:
+def table1_kernels(small: bool = False,
+                   arch: Optional[CGRAArch] = None) -> Dict[str, KernelSpec]:
     """The six Table-I kernels.  ``small=True`` returns reduced dims for
-    fast simulation-based verification (DFG structure identical)."""
+    fast simulation-based verification (DFG structure identical);
+    ``arch`` retargets the whole set (default: the paper's 4x4 cluster),
+    the entry point design-space sweeps build their suites from."""
     if small:
         g = dict(TI=6, TK=8, TJ=6)
         c = dict(OH=5, OW=5, K=3)
     else:
         g = dict(TI=64, TK=16, TJ=64)
         c = dict(OH=62, OW=62, K=3)
+    g["arch"] = c["arch"] = arch
     return {
         "GEMM": build_gemm(**g, unroll=1, coalesced=False),
         "GEMM-U": build_gemm(**g, unroll=4, coalesced=False),

@@ -359,17 +359,16 @@ def _build_batched(sig: simcache.SimSignature):
 def _banks_to_mem(cfg: SimConfig, banks: Dict[str, np.ndarray]) -> np.ndarray:
     mem = np.zeros(cfg.total_words,
                    dtype=np.int16 if cfg.bits == 16 else np.int32)
-    for i in range(len(cfg.bank_offsets)):
-        img = banks[f"bank{i}"]
-        mem[cfg.bank_offsets[i]:cfg.bank_offsets[i] + len(img)] = img
+    for bid, off in cfg.bank_offsets.items():
+        img = banks[f"bank{bid}"]
+        mem[off:off + len(img)] = img
     return mem
 
 
 def _mem_to_banks(cfg: SimConfig, mem: np.ndarray,
                   banks: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
-    return {f"bank{i}": mem[cfg.bank_offsets[i]:
-                            cfg.bank_offsets[i] + len(banks[f"bank{i}"])]
-            for i in range(len(cfg.bank_offsets))}
+    return {f"bank{bid}": mem[off:off + len(banks[f"bank{bid}"])]
+            for bid, off in cfg.bank_offsets.items()}
 
 
 def simulate(cfg: SimConfig, banks: Dict[str, np.ndarray],

@@ -23,9 +23,13 @@ Compiles are memoized through a content-addressed on-disk cache keyed by a
 stable SHA-256 of (DFG canonical form, arch ADL JSON, mapper options, data
 layout, invocation schedule).  Re-mapping the same tile — which the edge-
 deployment analyzer does for every GEMM site of every model — is a cache
-hit across processes and sessions.  Cache location: ``$MORPHER_CACHE_DIR``
-(default ``~/.cache/morpher-toolchain``; set it to the empty string, or
-pass ``cache_dir=""``, to disable the on-disk cache).
+hit across processes and sessions.  *Negative* results are memoized too:
+the mapper is deterministic, so a MapError for a given content address is
+as reproducible as a mapping, and a design-space sweep re-run must not
+re-pay the II escalation of every infeasible (arch, kernel) point — a
+``<key>.err.json`` marker short-circuits it.  Cache location:
+``$MORPHER_CACHE_DIR`` (default ``~/.cache/morpher-toolchain``; set it to
+the empty string, or pass ``cache_dir=""``, to disable the on-disk cache).
 """
 from __future__ import annotations
 
@@ -44,10 +48,13 @@ from .config_gen import SimConfig, generate_config
 from .dfg import DFG
 from .kernels_lib import KernelSpec
 from .layout import DataLayout
-from .mapper import Mapping, MapperOptions, map_kernel_opts
+from .mapper import MapError, Mapping, MapperOptions, map_kernel_opts
 from .pool import process_map
 
-ARTIFACT_VERSION = 1
+# v2: SimConfig.bank_offsets became an id-keyed mapping (banks are
+# identified by MemBank.id, not list position) — v1 artifacts are
+# incompatible and recompile on load
+ARTIFACT_VERSION = 2
 CACHE_ENV = "MORPHER_CACHE_DIR"
 
 
@@ -88,13 +95,20 @@ def spec_cache_key(spec: KernelSpec, options: MapperOptions) -> str:
 def _compile_worker(payload: str) -> str:
     """Process-pool worker: map + generate config from the JSON form of the
     compile inputs (specs carry unpicklable closures; their structural parts
-    round-trip losslessly).  Pure Python/numpy — no JAX in the child."""
+    round-trip losslessly).  Pure Python/numpy — no JAX in the child.
+
+    An infeasible mapping is a *result*, not a crash: MapError comes back
+    as an error marker so one unmappable (arch, kernel) pair — routine in
+    a design-space sweep — cannot kill the whole fan-out."""
     d = json.loads(payload)
     arch = CGRAArch.from_json(json.dumps(d["arch"]))
     dfg = DFG.from_json_dict(d["dfg"])
     layout = DataLayout.from_json_dict(d["layout"], arch)
     opt = MapperOptions.from_json_dict(d["options"])
-    mapping = map_kernel_opts(dfg, arch, layout, opt)
+    try:
+        mapping = map_kernel_opts(dfg, arch, layout, opt)
+    except MapError as e:
+        return json.dumps({"map_error": str(e)})
     cfg = generate_config(mapping, layout)
     return json.dumps({"mapping": mapping.to_json_dict(),
                        "cfg": json.loads(cfg.to_json())})
@@ -168,8 +182,8 @@ class CompiledKernel:
         """Deterministic random bank images over the target's banks — the
         self-contained test-data generator for deserialized artifacts."""
         rng = np.random.default_rng(seed)
-        return {f"bank{i}": rng.integers(-8, 8, size=w).astype(np.int64)
-                for i, w in enumerate(self.layout.bank_image_size())}
+        return {f"bank{bid}": rng.integers(-8, 8, size=w).astype(np.int64)
+                for bid, w in self.layout.bank_image_size().items()}
 
     def verify(self, seed: int = 0, check_dfg: bool = True
                ) -> "CompiledKernel":
@@ -314,6 +328,7 @@ class Toolchain:
         self.cache_dir = (default_cache_dir() if cache_dir is None
                           else cache_dir)
         self._memo: Dict[str, CompiledKernel] = {}
+        self._memo_err: Dict[str, str] = {}
         self._lock = threading.Lock()
 
     # ----------------------------------------------------------- cache I/O
@@ -321,6 +336,11 @@ class Toolchain:
         if not self.cache_dir:
             return None
         return os.path.join(self.cache_dir, f"{key}.json")
+
+    def _error_path(self, key: str) -> Optional[str]:
+        if not self.cache_dir:
+            return None
+        return os.path.join(self.cache_dir, f"{key}.err.json")
 
     def _cache_load(self, key: str) -> Optional[CompiledKernel]:
         path = self._cache_path(key)
@@ -356,8 +376,72 @@ class Toolchain:
                 except OSError:
                     pass
 
+    def _cache_load_error(self, key: str) -> Optional[str]:
+        """A memoized MapError message for this content address, if any
+        (the mapper is deterministic: same inputs, same failure)."""
+        with self._lock:
+            if key in self._memo_err:
+                return self._memo_err[key]
+        path = self._error_path(key)
+        if path is None or not os.path.exists(path):
+            return None
+        try:
+            with open(path, "r", encoding="utf-8") as f:
+                d = json.load(f)
+            if d.get("version") != ARTIFACT_VERSION:
+                return None
+            err = str(d["map_error"])
+        except (OSError, ValueError, KeyError, TypeError,
+                json.JSONDecodeError):
+            return None
+        with self._lock:
+            self._memo_err[key] = err
+        return err
+
+    def _cache_store_error(self, key: str, msg: str,
+                           opt: MapperOptions) -> None:
+        if opt.time_budget_s is not None:
+            # a budget-limited failure is wall-clock-dependent, not a
+            # property of the content address: a retry on an idle machine
+            # may map fine, so it must never become a sticky verdict
+            return
+        with self._lock:
+            self._memo_err[key] = msg
+        path = self._error_path(key)
+        if path is None:
+            return
+        tmp = None
+        try:
+            os.makedirs(self.cache_dir, exist_ok=True)
+            fd, tmp = tempfile.mkstemp(dir=self.cache_dir, suffix=".tmp")
+            with os.fdopen(fd, "w", encoding="utf-8") as f:
+                f.write(json.dumps({"version": ARTIFACT_VERSION,
+                                    "map_error": msg}))
+            os.replace(tmp, path)
+            tmp = None
+        except OSError:
+            pass  # cache is an optimization; never fail the compile
+        finally:
+            if tmp is not None:
+                try:
+                    os.unlink(tmp)
+                except OSError:
+                    pass
+
+    def cached_map_error(self, spec,
+                         options: Optional[MapperOptions] = None
+                         ) -> Optional[str]:
+        """The memoized MapError message for this compile, if one is on
+        record — how a sweep reports *why* a point was infeasible (op
+        support, bank reachability, II escalation) instead of a generic
+        "unmappable"."""
+        spec = self._bind(spec)
+        return self._cache_load_error(
+            spec_cache_key(spec, options or self.options))
+
     def clear_cache(self) -> None:
         self._memo.clear()
+        self._memo_err.clear()
         if self.cache_dir and os.path.isdir(self.cache_dir):
             for fn in os.listdir(self.cache_dir):
                 if fn.endswith((".json", ".tmp")):
@@ -419,14 +503,25 @@ class Toolchain:
             hit = self._lookup(key, spec)
             if hit is not None:
                 return hit
-        mapping = map_kernel_opts(spec.dfg, spec.arch, spec.layout, opt)
+            err = self._cache_load_error(key)
+            if err is not None:
+                # err already carries the kernel name (mapper formatting)
+                raise MapError(f"{err} [cached result]")
+        try:
+            mapping = map_kernel_opts(spec.dfg, spec.arch, spec.layout, opt)
+        except MapError as e:
+            if use_cache:
+                self._cache_store_error(key, str(e), opt)
+            raise
         cfg = generate_config(mapping, spec.layout)
         return self._finish(spec, opt, key, mapping, cfg, use_cache)
 
     def compile_many(self, specs: Iterable[KernelSpec],
                      options: Optional[MapperOptions] = None,
                      jobs: Optional[int] = None,
-                     use_cache: bool = True) -> List[CompiledKernel]:
+                     use_cache: bool = True,
+                     allow_unmapped: bool = False
+                     ) -> List[Optional[CompiledKernel]]:
         """Fan independent kernel compiles out across worker processes.
 
         Cache hits resolve immediately; misses (deduplicated by content
@@ -435,18 +530,38 @@ class Toolchain:
         through its JSON form (specs carry unpicklable closures; their
         structural parts round-trip losslessly).  Falls back to sequential
         in-process compiles if no process pool is available.
+
+        Specs may target heterogeneous architectures — each compile carries
+        its own arch — which is how design-space sweeps fan one kernel
+        suite across many CGRA variants.  With ``allow_unmapped=True`` an
+        infeasible (arch, kernel) pair yields ``None`` at its index instead
+        of raising MapError, so one impossible variant cannot abort a
+        sweep; the default remains raise-on-failure.  Failures are
+        memoized like successes (deterministic mapper, deterministic
+        failure), so a sweep re-run does not re-pay the II escalation of
+        its infeasible points.
         """
         specs = [self._bind(s) for s in specs]
         opt = options or self.options
         keys = [spec_cache_key(s, opt) for s in specs]
         results: List[Optional[CompiledKernel]] = [None] * len(specs)
         todo: Dict[str, List[int]] = {}      # cache_key -> spec indices
+
+        def unmapped(idxs: List[int], err: str) -> None:
+            if not allow_unmapped:
+                # err already carries the kernel name (mapper formatting)
+                raise MapError(err)
+
         for i, (spec, key) in enumerate(zip(specs, keys)):
             hit = self._lookup(key, spec) if use_cache else None
             if hit is not None:
                 results[i] = hit
-            else:
-                todo.setdefault(key, []).append(i)
+                continue
+            err = self._cache_load_error(key) if use_cache else None
+            if err is not None:
+                unmapped([i], f"{err} [cached result]")
+                continue    # allow_unmapped: stays None
+            todo.setdefault(key, []).append(i)
 
         def finish(key: str, idxs: List[int], mapping: Mapping,
                    cfg: SimConfig) -> None:
@@ -472,6 +587,12 @@ class Toolchain:
             if outs is not None:
                 for (key, idxs), out in zip(order, outs):
                     d = json.loads(out)
+                    if "map_error" in d:
+                        if use_cache:
+                            self._cache_store_error(key, d["map_error"],
+                                                    opt)
+                        unmapped(idxs, d["map_error"])
+                        continue
                     spec = specs[idxs[0]]
                     finish(key, idxs,
                            Mapping.from_json_dict(d["mapping"], spec.dfg,
@@ -480,7 +601,14 @@ class Toolchain:
                 order = []
         for key, idxs in order:              # sequential path / fallback
             spec = specs[idxs[0]]
-            mapping = map_kernel_opts(spec.dfg, spec.arch, spec.layout, opt)
+            try:
+                mapping = map_kernel_opts(spec.dfg, spec.arch, spec.layout,
+                                          opt)
+            except MapError as e:
+                if use_cache:
+                    self._cache_store_error(key, str(e), opt)
+                unmapped(idxs, str(e))
+                continue
             finish(key, idxs, mapping, generate_config(mapping, spec.layout))
         return results
 

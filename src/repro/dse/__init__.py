@@ -1,0 +1,30 @@
+"""Architecture design-space exploration (the paper's "vast design space
+of CGRAs" claim as a first-class subsystem).
+
+The DSE loop mirrors the agile-hardware workflow of the open-CGRA
+ecosystem papers: enumerate parameterized :class:`~repro.core.CGRAArch`
+variants (``space``), fan the full kernel library across them on the
+shared worker pool with content-addressed compile memoization and
+resumable checkpointing (``explore``), then score each variant against an
+area proxy and report the Pareto frontier (``pareto``).
+
+    from repro.dse import get_space, run_sweep, frontier
+
+    results = run_sweep(get_space("small"))
+    best = frontier(results)
+
+CLI entry point: ``examples/dse_sweep.py --space small``.
+"""
+from .space import (ArchPoint, SPACE_NAMES, get_space, full_space,
+                    small_space, tiny_space)
+from .explore import (KernelOutcome, VariantResult, kernel_suite, run_sweep,
+                      SUITE_KERNELS)
+from .pareto import (area_units, frontier, frontier_table, sweep_bench_rows,
+                     write_artifacts)
+
+__all__ = [
+    "ArchPoint", "SPACE_NAMES", "get_space", "full_space", "small_space",
+    "tiny_space", "KernelOutcome", "VariantResult", "kernel_suite",
+    "run_sweep", "SUITE_KERNELS", "area_units", "frontier", "frontier_table",
+    "sweep_bench_rows", "write_artifacts",
+]

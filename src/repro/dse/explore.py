@@ -1,0 +1,311 @@
+"""Design-space sweep driver: fan the kernel library across architecture
+variants with memoized compiles, batched verification and resumable
+checkpointing.
+
+For every :class:`~repro.dse.space.ArchPoint` the driver builds the
+ten-kernel suite (the six Table-I kernels at verification dims plus the
+four DSL-only kernels) against that variant, compiles the whole suite
+through ``Toolchain.compile_many`` (process fan-out; per-(arch, kernel)
+results are content-addressed cache hits on re-runs), verifies each
+mapped kernel with the batched IV-C engine, and scores it with
+``costmodel.kernel_cost``.  Each mapping spans the variant's whole
+fabric, so it is scored as one configured instance (``clusters=1``);
+the variant's logical cluster count is reported as metadata only.
+
+Infeasible points are results, not errors: a kernel that cannot be laid
+out (bank overflow), mapped (MapError within ``ii_max``) or verified is
+recorded with its status, and the variant simply drops out of the Pareto
+candidate set.
+
+Checkpointing: pass ``checkpoint=<path>`` and every finished variant is
+flushed to JSON (atomic tmp+rename); an interrupted sweep resumes by
+skipping variants already on disk.  The checkpoint records a fingerprint
+of (mapper options, seeds, suite) and ignores stale files whose
+fingerprint differs.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence
+
+from ..core.adl import CGRAArch
+from ..core.costmodel import WORD_BYTES, kernel_cost
+from ..core.kernels_lib import KernelSpec, table1_kernels
+from ..core.mapper import MapperOptions
+from ..core.toolchain import Toolchain
+from ..frontend.library import dsl_kernels
+from .pareto import area_units
+from .space import ArchPoint
+
+# the ten-kernel library every variant is scored on, in report order
+SUITE_KERNELS = ("GEMM", "GEMM-U", "GEMM-U-C", "CONV", "CONV-U-C-1",
+                 "CONV-U-C-2", "dwconv", "avgpool2x2", "gemm-bias-relu",
+                 "requant-int8")
+
+CHECKPOINT_SCHEMA = 1
+
+
+def kernel_suite(arch: CGRAArch) -> Dict[str, KernelSpec]:
+    """The full kernel library bound to ``arch`` (Table-I verification
+    dims + DSL kernels), keyed in ``SUITE_KERNELS`` order."""
+    suite = {**table1_kernels(small=True, arch=arch), **dsl_kernels(arch)}
+    return {k: suite[k] for k in SUITE_KERNELS}
+
+
+# --------------------------------------------------------------- results
+@dataclass
+class KernelOutcome:
+    """One (variant, kernel) cell of the sweep."""
+    kernel: str
+    status: str                   # ok | layout_error | map_error | verify_error
+    II: int = 0
+    mii: int = 0
+    utilization: float = 0.0
+    cycles_per_inv: int = 0
+    invocations: int = 0
+    compute_ms: float = 0.0
+    total_ms: float = 0.0
+    from_cache: bool = False
+    cache_key: str = ""
+    error: str = ""
+
+    def to_json_dict(self) -> Dict:
+        # from_cache is a property of the *run*, not the result — keeping
+        # it out of the artifact is what makes cold and warm sweeps
+        # byte-identical
+        return {k: v for k, v in self.__dict__.items() if k != "from_cache"}
+
+    @staticmethod
+    def from_json_dict(d: Dict) -> "KernelOutcome":
+        return KernelOutcome(**d)
+
+
+@dataclass
+class VariantResult:
+    """One architecture variant: per-kernel outcomes + aggregate score."""
+    name: str
+    point: ArchPoint
+    n_pes: int
+    clusters: int
+    area: int
+    kernels: Dict[str, KernelOutcome] = field(default_factory=dict)
+
+    @property
+    def ok(self) -> bool:
+        """Every suite kernel compiled AND verified on this variant."""
+        return (len(self.kernels) == len(SUITE_KERNELS)
+                and all(o.status == "ok" for o in self.kernels.values()))
+
+    @property
+    def mapped(self) -> int:
+        return sum(1 for o in self.kernels.values() if o.status == "ok")
+
+    @property
+    def total_ms(self) -> float:
+        """Suite latency: modeled total over all (verified) kernels."""
+        return sum(o.total_ms for o in self.kernels.values()
+                   if o.status == "ok")
+
+    @property
+    def mean_utilization(self) -> float:
+        utils = [o.utilization for o in self.kernels.values()
+                 if o.status == "ok"]
+        return sum(utils) / len(utils) if utils else 0.0
+
+    @property
+    def max_ii(self) -> int:
+        return max((o.II for o in self.kernels.values()
+                    if o.status == "ok"), default=0)
+
+    def to_json_dict(self) -> Dict:
+        return {"name": self.name, "point": self.point.to_json_dict(),
+                "n_pes": self.n_pes, "clusters": self.clusters,
+                "area": self.area,
+                "kernels": {k: o.to_json_dict()
+                            for k, o in self.kernels.items()}}
+
+    @staticmethod
+    def from_json_dict(d: Dict) -> "VariantResult":
+        return VariantResult(
+            name=d["name"], point=ArchPoint.from_json_dict(d["point"]),
+            n_pes=d["n_pes"], clusters=d["clusters"], area=d["area"],
+            kernels={k: KernelOutcome.from_json_dict(o)
+                     for k, o in d["kernels"].items()})
+
+
+# ------------------------------------------------------------ checkpoint
+def _fingerprint(options: MapperOptions, seeds: Sequence[int],
+                 verify: bool) -> Dict:
+    # verify is part of the identity: resuming a --no-verify checkpoint
+    # must not let unsimulated mappings pass as "fully verified"
+    return {"schema": CHECKPOINT_SCHEMA,
+            "options": options.to_json_dict(),
+            "seeds": list(seeds),
+            "verify": bool(verify),
+            "suite": list(SUITE_KERNELS)}
+
+
+def _load_checkpoint(path: Optional[str], fp: Dict
+                     ) -> Dict[str, VariantResult]:
+    if not path or not os.path.exists(path):
+        return {}
+    try:
+        with open(path, "r", encoding="utf-8") as f:
+            d = json.load(f)
+        if d.get("fingerprint") != fp:
+            return {}  # different sweep configuration: start fresh
+        return {name: VariantResult.from_json_dict(v)
+                for name, v in d["variants"].items()}
+    except (OSError, ValueError, KeyError, TypeError):
+        return {}      # corrupt checkpoint: recompute (cache soaks the cost)
+
+
+def _store_checkpoint(path: Optional[str], fp: Dict,
+                      done: Dict[str, VariantResult]) -> None:
+    if not path:
+        return
+    blob = json.dumps(
+        {"fingerprint": fp,
+         "variants": {name: v.to_json_dict()
+                      for name, v in sorted(done.items())}},
+        sort_keys=True, indent=1)
+    out_dir = os.path.dirname(os.path.abspath(path))
+    try:
+        os.makedirs(out_dir, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=out_dir, suffix=".tmp")
+        with os.fdopen(fd, "w", encoding="utf-8") as f:
+            f.write(blob)
+        os.replace(tmp, path)  # atomic: a killed sweep never corrupts it
+    except OSError:
+        pass                   # checkpointing is an optimization only
+
+
+# ------------------------------------------------------------------ sweep
+def _score_variant(point: ArchPoint, arch: CGRAArch, tc: Toolchain,
+                   seeds: Sequence[int], jobs: Optional[int],
+                   verify: bool) -> VariantResult:
+    # clusters is descriptive metadata here, NOT a cost divisor: the
+    # mapper schedules each kernel across the variant's whole fabric
+    # (one configured instance), so modeling extra data-parallel copies
+    # on top would double-count the same PEs.  kernel_cost's clusters
+    # division is for per-cluster mappings scaled to a multi-cluster
+    # deployment (the Table-I convention).
+    n_clusters = max(1, len(arch.clusters))
+    result = VariantResult(name=point.name, point=point, n_pes=arch.n_pes,
+                           clusters=n_clusters, area=area_units(arch))
+
+    try:
+        suite = kernel_suite(arch)
+    except ValueError as e:
+        # a kernel's arrays do not fit this variant's banks: the whole
+        # suite is un-layoutable here (the builders share the bank scheme)
+        result.kernels = {k: KernelOutcome(kernel=k, status="layout_error",
+                                           error=str(e))
+                          for k in SUITE_KERNELS}
+        return result
+
+    names = list(SUITE_KERNELS)
+    cks = tc.compile_many([suite[k] for k in names], jobs=jobs,
+                          allow_unmapped=True)
+    for kname, ck in zip(names, cks):
+        if ck is None:
+            reason = (tc.cached_map_error(suite[kname])
+                      or f"unmappable within ii_max={tc.options.ii_max}")
+            result.kernels[kname] = KernelOutcome(
+                kernel=kname, status="map_error", error=reason)
+            continue
+        status, err = "ok", ""
+        if verify:
+            try:
+                ck.verify_batch(seeds)
+            except AssertionError as e:
+                status, err = "verify_error", str(e)
+        cost = kernel_cost(
+            suite[kname], ck.mapping,
+            array_bytes_moved=sum(p.words for p in
+                                  suite[kname].layout.placements.values())
+            * WORD_BYTES)
+        result.kernels[kname] = KernelOutcome(
+            kernel=kname, status=status, II=ck.II, mii=ck.mii,
+            utilization=round(ck.utilization, 6),
+            cycles_per_inv=cost.cycles_per_inv,
+            invocations=cost.invocations,
+            compute_ms=round(cost.compute_ms, 6),
+            total_ms=round(cost.total_ms, 6),
+            from_cache=ck.from_cache, cache_key=ck.cache_key, error=err)
+    return result
+
+
+def run_sweep(points: Sequence[ArchPoint], *,
+              seeds: Sequence[int] = (0,),
+              options: Optional[MapperOptions] = None,
+              toolchain: Optional[Toolchain] = None,
+              checkpoint: Optional[str] = None,
+              jobs: Optional[int] = None,
+              verify: bool = True,
+              log: Optional[Callable[[str], None]] = None
+              ) -> List[VariantResult]:
+    """Sweep the kernel library across ``points``; returns one
+    :class:`VariantResult` per point, in input order.
+
+    Deterministic by construction: mapper search is seeded and
+    wall-clock-free (the default options carry no time budget), scores
+    come from the analytic cost model, and re-runs hit the toolchain's
+    content-addressed cache — so two runs of the same sweep produce
+    byte-identical reports, the second one warm.
+
+    ``options`` configures the sweep's own Toolchain; when a ``toolchain``
+    is passed its options govern (they feed every compile and the
+    checkpoint fingerprint), so passing a *different* ``options`` too is
+    a contradiction and raises.
+    """
+    if toolchain is not None and options is not None \
+            and options != toolchain.options:
+        raise ValueError("run_sweep: options conflicts with "
+                         "toolchain.options; pass one or the other")
+    if verify and not len(seeds):
+        raise ValueError("run_sweep: verify=True needs at least one seed "
+                         "(verify_batch over zero seeds checks nothing); "
+                         "pass verify=False to skip verification "
+                         "explicitly")
+    options = options or MapperOptions(ii_max=20)
+    tc = toolchain or Toolchain(options=options)
+    say = log or (lambda s: None)
+
+    fp = _fingerprint(tc.options, seeds, verify)
+    done = _load_checkpoint(checkpoint, fp)
+    if done:
+        say(f"# checkpoint: {len(done)} variant(s) already swept")
+
+    results: List[VariantResult] = []
+    for i, point in enumerate(points):
+        if point.name in done:
+            results.append(done[point.name])
+            continue
+        t0 = time.time()
+        try:
+            arch = point.build()
+        except ValueError as e:
+            vr = VariantResult(name=point.name, point=point, n_pes=0,
+                               clusters=0, area=0)
+            vr.kernels = {k: KernelOutcome(kernel=k, status="layout_error",
+                                           error=str(e))
+                          for k in SUITE_KERNELS}
+            done[point.name] = vr
+            results.append(vr)
+            _store_checkpoint(checkpoint, fp, done)
+            say(f"[{i + 1}/{len(points)}] {point.name}: invalid ({e})")
+            continue
+        vr = _score_variant(point, arch, tc, seeds, jobs, verify)
+        done[point.name] = vr
+        results.append(vr)
+        _store_checkpoint(checkpoint, fp, done)
+        say(f"[{i + 1}/{len(points)}] {point.name}: "
+            f"{vr.mapped}/{len(SUITE_KERNELS)} kernels ok, "
+            f"area={vr.area}, latency={vr.total_ms:.3f}ms "
+            f"({time.time() - t0:.1f}s)")
+    return results

@@ -1,0 +1,198 @@
+"""Parameterized CGRA architecture generator for design-space sweeps.
+
+An :class:`ArchPoint` is one coordinate of the ADL design space the paper
+calls architecture-adaptivity: grid size, torus vs mesh interconnect,
+routing register-file size, memory bank count/size/placement, and
+heterogeneous per-PE op sets.  ``ArchPoint.build()`` materializes the
+coordinate as a validated :class:`~repro.core.adl.CGRAArch` with a
+deterministic name, so a sweep is reproducible from its space name alone
+and every (variant, kernel) compile is a stable content-addressed cache
+key.
+
+Bank placement follows the paper's target family: data memories sit on
+the left/right boundary columns behind shared buses (one access port per
+bank per cycle).  ``banks_per_col=2`` splits each boundary column into a
+top-half and bottom-half bank — more aggregate ports, same capacity
+knob.  Bank ids are assigned so that id 0 is always a left-column bank
+and id 1 a right-column bank, matching the kernel library's layout hints
+(accumulator/weight arrays vs streamed inputs on opposite buses).
+
+Heterogeneity (``het``):
+  none     homogeneous FUs (every PE has the full op set)
+  alulite  interior PEs keep only the arithmetic core (add/sub/mul/
+           shl/shr + const/livein); compare/select/bitwise logic — the
+           induction-chain machinery of coalesced kernels — is restricted
+           to the boundary columns, modeling cheap ALU-lite interior
+           tiles.  (Memory ops are always boundary-only: LOAD/STORE must
+           reach a bank bus regardless of the op set.)
+"""
+from __future__ import annotations
+
+from dataclasses import asdict, dataclass
+from typing import Dict, List
+
+from ..core.adl import CGRAArch, MemBank
+from ..core.dfg import Op
+
+# the arithmetic core every PE keeps under "alulite" heterogeneity
+LITE_OPS = frozenset(o.value for o in (Op.ADD, Op.SUB, Op.MUL, Op.SHL,
+                                       Op.SHR, Op.CONST, Op.LIVEIN))
+
+HET_KINDS = ("none", "alulite")
+
+
+@dataclass(frozen=True)
+class ArchPoint:
+    """One coordinate of the CGRA design space (see module docstring)."""
+    rows: int
+    cols: int
+    torus: bool = False
+    regfile_size: int = 8
+    bank_kb: int = 8
+    banks_per_col: int = 1
+    het: str = "none"
+
+    @property
+    def name(self) -> str:
+        """Deterministic variant name — the checkpoint / report / cache
+        identity of this point."""
+        topo = "torus" if self.torus else "mesh"
+        n_banks = 2 * self.banks_per_col
+        s = (f"dse-{self.rows}x{self.cols}-{topo}-rf{self.regfile_size}"
+             f"-b{n_banks}x{self.bank_kb}k")
+        if self.het != "none":
+            s += f"-{self.het}"
+        return s
+
+    def to_json_dict(self) -> Dict:
+        return asdict(self)
+
+    @staticmethod
+    def from_json_dict(d: Dict) -> "ArchPoint":
+        return ArchPoint(**d)
+
+    def build(self) -> CGRAArch:
+        """Materialize (and validate) the CGRAArch for this point."""
+        rows, cols = self.rows, self.cols
+        if cols < 2:
+            raise ValueError(f"{self.name}: need >= 2 columns for "
+                             f"left/right boundary memory buses")
+        if self.banks_per_col not in (1, 2):
+            raise ValueError(f"{self.name}: banks_per_col must be 1 or 2")
+        if self.banks_per_col == 2 and rows < 2:
+            raise ValueError(f"{self.name}: banks_per_col=2 needs >= 2 rows")
+        if self.het not in HET_KINDS:
+            raise ValueError(f"{self.name}: unknown het kind {self.het!r} "
+                             f"(choose from {HET_KINDS})")
+
+        left = [r * cols + 0 for r in range(rows)]
+        right = [r * cols + (cols - 1) for r in range(rows)]
+        size = self.bank_kb * 1024
+        banks: List[MemBank] = []
+        if self.banks_per_col == 1:
+            banks = [MemBank(0, size, tuple(left)),
+                     MemBank(1, size, tuple(right))]
+        else:
+            half = rows // 2
+            banks = [MemBank(0, size, tuple(left[:half])),
+                     MemBank(1, size, tuple(right[:half])),
+                     MemBank(2, size, tuple(left[half:])),
+                     MemBank(3, size, tuple(right[half:]))]
+
+        # logical clustering: tile 4x4 clusters when the grid allows more
+        # than one (the paper's 8x8 = 4 clusters), else one cluster
+        if rows % 4 == 0 and cols % 4 == 0 and rows * cols > 16:
+            clusters = [[(cr * 4 + r) * cols + (cc * 4 + c)
+                         for r in range(4) for c in range(4)]
+                        for cr in range(rows // 4) for cc in range(cols // 4)]
+        else:
+            clusters = [list(range(rows * cols))]
+
+        per_pe_ops: Dict[int, frozenset] = {}
+        if self.het == "alulite":
+            boundary = set(left) | set(right)
+            per_pe_ops = {p: LITE_OPS for p in range(rows * cols)
+                          if p not in boundary}
+
+        arch = CGRAArch(name=self.name, rows=rows, cols=cols,
+                        datapath_bits=16, regfile_size=self.regfile_size,
+                        banks=banks, torus=self.torus,
+                        per_pe_ops=per_pe_ops, clusters=clusters)
+        arch.validate()
+        return arch
+
+
+# ------------------------------------------------------------------ spaces
+def tiny_space() -> List[ArchPoint]:
+    """Four variants for CI smoke — a strict subset of ``small`` so the
+    smoke BENCH rows stay comparable against the committed small-sweep
+    baseline."""
+    return [
+        ArchPoint(4, 4),
+        ArchPoint(4, 4, torus=True),
+        ArchPoint(4, 4, regfile_size=4),
+        ArchPoint(4, 4, banks_per_col=2, bank_kb=4),
+    ]
+
+
+def small_space() -> List[ArchPoint]:
+    """The default sweep: 20 variants spanning every knob, centered on
+    grids the whole kernel library maps onto comfortably (the 4x4
+    cluster family, 4x8, 8x8), plus aggressive stretch points — 2x2 and
+    2x4 grids, ALU-lite interiors, small register files — where some
+    kernels legitimately fail to map within ``ii_max`` (the sweep driver
+    records those as per-kernel statuses and drops the variant from the
+    Pareto candidate set)."""
+    pts = list(tiny_space())
+    pts += [
+        ArchPoint(4, 4, regfile_size=16),
+        ArchPoint(4, 4, torus=True, regfile_size=4),
+        ArchPoint(4, 4, torus=True, regfile_size=16),
+        ArchPoint(4, 4, torus=True, banks_per_col=2, bank_kb=4),
+        ArchPoint(4, 4, banks_per_col=2),
+        ArchPoint(4, 4, torus=True, banks_per_col=2),
+        ArchPoint(4, 4, regfile_size=16, banks_per_col=2, bank_kb=4),
+        ArchPoint(4, 4, torus=True, regfile_size=16, banks_per_col=2,
+                  bank_kb=4),
+        ArchPoint(4, 8),
+        ArchPoint(4, 8, torus=True),
+        ArchPoint(8, 8),
+        ArchPoint(8, 8, torus=True),
+        # stretch points: minimal grids and heterogeneous interiors
+        ArchPoint(2, 2),
+        ArchPoint(2, 4),
+        ArchPoint(4, 4, het="alulite"),
+        ArchPoint(4, 4, torus=True, het="alulite"),
+    ]
+    return pts
+
+
+def full_space() -> List[ArchPoint]:
+    """The exhaustive grid: every knob combination over 2x2..8x8 grids.
+    Deterministic enumeration order; infeasible/unmappable points are
+    sweep results ("unmapped"), not errors."""
+    pts: List[ArchPoint] = []
+    for rows, cols in ((2, 2), (2, 4), (4, 4), (4, 8), (6, 6), (8, 8)):
+        for torus in (False, True):
+            for rf in (4, 8, 16):
+                for bank_kb, bpc in ((8, 1), (4, 2), (8, 2)):
+                    for het in ("none", "alulite"):
+                        if het == "alulite" and cols <= 2:
+                            continue  # no interior PEs to restrict
+                        pts.append(ArchPoint(rows, cols, torus=torus,
+                                             regfile_size=rf,
+                                             bank_kb=bank_kb,
+                                             banks_per_col=bpc, het=het))
+    return pts
+
+
+SPACE_NAMES = ("tiny", "small", "full")
+
+
+def get_space(name: str) -> List[ArchPoint]:
+    try:
+        return {"tiny": tiny_space, "small": small_space,
+                "full": full_space}[name]()
+    except KeyError:
+        raise ValueError(f"unknown space {name!r} (choose from "
+                         f"{SPACE_NAMES})") from None

@@ -1,0 +1,253 @@
+"""Design-space explorer: deterministic space enumeration, variant
+generation, sweep end-to-end (compile + verify + score) with checkpoint
+resume and byte-deterministic artifacts, Pareto frontier math, the
+cost-model clusters fix, and compile_many's unmapped tolerance."""
+import json
+import os
+
+import pytest
+
+from repro.core.costmodel import kernel_cost
+from repro.core.kernels_lib import build_gemm
+from repro.core.mapper import MapperOptions
+from repro.core.toolchain import Toolchain
+from repro.dse import (ArchPoint, SUITE_KERNELS, area_units, frontier,
+                       frontier_table, get_space, kernel_suite, run_sweep,
+                       write_artifacts)
+from repro.dse.explore import KernelOutcome, VariantResult
+
+
+# ------------------------------------------------------------------- space
+def test_space_enumeration_is_deterministic_and_unique():
+    for name in ("tiny", "small", "full"):
+        pts = get_space(name)
+        assert pts == get_space(name)
+        names = [p.name for p in pts]
+        assert len(names) == len(set(names))
+    assert len(get_space("tiny")) == 4
+    assert len(get_space("small")) >= 14
+    # tiny is a strict subset of small: smoke BENCH rows stay comparable
+    small = {p.name for p in get_space("small")}
+    assert {p.name for p in get_space("tiny")} < small
+    with pytest.raises(ValueError, match="unknown space"):
+        get_space("bogus")
+
+
+def test_arch_point_builds_validated_variants():
+    p = ArchPoint(4, 4, torus=True, regfile_size=16, bank_kb=4,
+                  banks_per_col=2)
+    arch = p.build()
+    assert arch.name == p.name == "dse-4x4-torus-rf16-b4x4k"
+    assert arch.torus and arch.regfile_size == 16
+    assert [b.id for b in arch.banks] == [0, 1, 2, 3]
+    assert all(b.size_bytes == 4096 for b in arch.banks)
+    # id 0 on the left column, id 1 on the right (kernel layout contract)
+    assert all(pe % 4 == 0 for pe in arch.pes_of_bank(0))
+    assert all(pe % 4 == 3 for pe in arch.pes_of_bank(1))
+
+    lite = ArchPoint(4, 4, het="alulite").build()
+    from repro.core.dfg import Op
+    interior = [p_ for p_ in range(16) if p_ % 4 not in (0, 3)]
+    assert all(not lite.supports(p_, Op.SELECT) for p_ in interior)
+    assert all(lite.supports(p_, Op.MUL) for p_ in interior)
+    assert lite.supports(0, Op.SELECT)
+
+    with pytest.raises(ValueError, match="2 columns"):
+        ArchPoint(4, 1).build()
+    with pytest.raises(ValueError, match="banks_per_col"):
+        ArchPoint(4, 4, banks_per_col=3).build()
+    with pytest.raises(ValueError, match="het"):
+        ArchPoint(4, 4, het="quantum").build()
+
+
+def test_kernel_suite_is_the_ten_kernel_library():
+    suite = kernel_suite(ArchPoint(4, 4).build())
+    assert tuple(suite) == SUITE_KERNELS
+    assert len(suite) == 10
+
+
+# ------------------------------------------------------------------ pareto
+def _variant(name, area, total_ms, ok=True):
+    status = "ok" if ok else "map_error"
+    v = VariantResult(name=name, point=ArchPoint(4, 4), n_pes=16,
+                      clusters=1, area=area)
+    v.kernels = {k: KernelOutcome(kernel=k, status=status,
+                                  total_ms=total_ms / len(SUITE_KERNELS))
+                 for k in SUITE_KERNELS}
+    return v
+
+
+def test_frontier_keeps_only_nondominated_variants():
+    a = _variant("a", area=100, total_ms=1.0)   # fast, big
+    b = _variant("b", area=50, total_ms=2.0)    # slower, smaller
+    c = _variant("c", area=120, total_ms=1.5)   # dominated by a
+    d = _variant("d", area=50, total_ms=3.0)    # dominated by b
+    e = _variant("e", area=10, total_ms=0.5, ok=False)  # failed: excluded
+    front = [r.name for r in frontier([e, d, c, b, a])]
+    assert front == ["a", "b"]
+    table = frontier_table([e, d, c, b, a])
+    assert "dse" not in table.splitlines()[0]  # header row
+    assert table.count("*") == 2
+
+
+def test_area_units_is_a_deterministic_integer():
+    arch = ArchPoint(4, 4).build()          # 16 PEs, rf8+li4, 2x8kB banks
+    assert area_units(arch) == 16 * (4 + 8 + 4) + 16 * 8 == 384
+    bigger = ArchPoint(8, 8).build()
+    assert area_units(bigger) > area_units(arch)
+
+
+# ------------------------------------------------------- costmodel clusters
+def test_kernel_cost_divides_compute_across_clusters():
+    spec = build_gemm(TI=4, TK=4, TJ=4)
+    ck = Toolchain(cache_dir="").compile(spec)
+    c1 = kernel_cost(spec, ck.mapping, array_bytes_moved=1000.0,
+                     handshake_us=5.0)
+    c4 = kernel_cost(spec, ck.mapping, array_bytes_moved=1000.0,
+                     handshake_us=5.0, clusters=4)
+    # 16 invocations over 4 clusters: compute shrinks exactly 4x ...
+    assert c4.compute_ms == pytest.approx(c1.compute_ms / 4)
+    assert c4.clusters == 4 and c1.clusters == 1
+    # ... while shared-link transfer and handshake stay whole-problem
+    assert c4.transfer_ms == pytest.approx(c1.transfer_ms)
+    assert c4.total_ms == pytest.approx(c4.compute_ms + c4.transfer_ms)
+    # ceil semantics: the slowest cluster bounds compute
+    c3 = kernel_cost(spec, ck.mapping, clusters=3)
+    assert c3.compute_ms == pytest.approx(
+        -(-c1.invocations // 3) * c1.cycles_per_inv / 100e6 * 1e3)
+    with pytest.raises(ValueError):
+        kernel_cost(spec, ck.mapping, clusters=0)
+
+
+# ------------------------------------------------- compile_many tolerance
+def test_compile_many_allow_unmapped_yields_none(tmp_path):
+    ok_spec = build_gemm(TI=4, TK=4, TJ=4)
+    tc = Toolchain(options=MapperOptions(ii_max=1),  # < MII: must fail
+                   cache_dir=str(tmp_path))
+    from repro.core.mapper import MapError
+    with pytest.raises(MapError):
+        tc.compile_many([ok_spec, build_gemm(TI=4, TK=4, TJ=4, unroll=4)])
+    out = tc.compile_many([ok_spec], allow_unmapped=True)
+    assert out == [None]
+    # mixed outcomes across heterogeneous specs in one fan-out
+    tc2 = Toolchain(cache_dir=str(tmp_path))
+    specs = [build_gemm(TI=4, TK=4, TJ=4),
+             build_gemm(TI=4, TK=4, TJ=4, unroll=2)]
+    cks = tc2.compile_many(specs, allow_unmapped=True)
+    assert all(ck is not None for ck in cks)
+
+
+def test_map_failures_are_memoized(tmp_path):
+    """Negative results are content-addressed cache entries too: a sweep
+    re-run (same spec, same options) must not re-pay the II escalation
+    of an infeasible point, in-process or across Toolchain instances."""
+    from repro.core.mapper import MapError
+    spec = build_gemm(TI=4, TK=4, TJ=4)
+    opts = MapperOptions(ii_max=1)
+    tc = Toolchain(options=opts, cache_dir=str(tmp_path))
+    assert tc.compile_many([spec], allow_unmapped=True) == [None]
+    errs = [f for f in tmp_path.iterdir() if f.name.endswith(".err.json")]
+    assert len(errs) == 1
+    # a fresh Toolchain short-circuits off the disk marker...
+    tc2 = Toolchain(options=opts, cache_dir=str(tmp_path))
+    assert tc2.compile_many([spec], allow_unmapped=True) == [None]
+    with pytest.raises(MapError, match="cached result"):
+        tc2.compile(spec)
+    # ...and clear_cache forgets it
+    tc2.clear_cache()
+    assert not any(f.name.endswith(".err.json") for f in tmp_path.iterdir())
+    with pytest.raises(MapError) as ei:
+        Toolchain(options=opts, cache_dir=str(tmp_path)).compile(spec)
+    assert "cached result" not in str(ei.value)
+    # budget-limited failures are wall-clock-dependent: never memoized
+    n_markers = sum(f.name.endswith(".err.json")
+                    for f in tmp_path.iterdir())
+    budgeted = MapperOptions(ii_max=1, time_budget_s=120.0)
+    tc3 = Toolchain(options=budgeted, cache_dir=str(tmp_path))
+    assert tc3.compile_many([spec], allow_unmapped=True) == [None]
+    assert sum(f.name.endswith(".err.json")
+               for f in tmp_path.iterdir()) == n_markers
+
+
+# ------------------------------------------------------- sweep end to end
+@pytest.fixture(scope="module")
+def swept(tmp_path_factory):
+    """One 2-variant sweep, shared by the e2e assertions below."""
+    root = tmp_path_factory.mktemp("dse")
+    points = get_space("tiny")[:2]
+    tc = Toolchain(options=MapperOptions(ii_max=20),
+                   cache_dir=str(root / "cache"))
+    logs = []
+    results = run_sweep(points, toolchain=tc,
+                        checkpoint=str(root / "ckpt.json"),
+                        log=logs.append)
+    return root, points, tc, results, logs
+
+
+def test_sweep_compiles_and_verifies_all_kernels(swept):
+    _root, points, _tc, results, _logs = swept
+    assert [r.name for r in results] == [p.name for p in points]
+    for r in results:
+        assert r.ok, {k: o.status for k, o in r.kernels.items()}
+        assert set(r.kernels) == set(SUITE_KERNELS)
+        assert all(o.II >= o.mii >= 1 for o in r.kernels.values())
+        assert r.total_ms > 0 and r.area > 0
+
+
+def test_sweep_resumes_from_checkpoint_and_is_deterministic(swept):
+    root, points, tc, results, _logs = swept
+    out1 = root / "out1"
+    write_artifacts(results, str(out1), space="test")
+
+    # re-run with the same checkpoint: every variant is skipped ...
+    logs2 = []
+    results2 = run_sweep(points, toolchain=tc,
+                         checkpoint=str(root / "ckpt.json"),
+                         log=logs2.append)
+    assert any("checkpoint: 2 variant" in s for s in logs2)
+    # ... and the artifacts are byte-identical (cold == warm == resumed)
+    out2 = root / "out2"
+    write_artifacts(results2, str(out2), space="test")
+    for name in ("dse_frontier.json", "BENCH_dse_sweep.json"):
+        assert (out1 / name).read_bytes() == (out2 / name).read_bytes()
+
+    # a partial checkpoint resumes mid-sweep: drop one variant and the
+    # sweep recomputes only that one (mapping cache makes it instant)
+    ck = json.loads((root / "ckpt.json").read_text())
+    dropped = points[1].name
+    del ck["variants"][dropped]
+    (root / "ckpt.json").write_text(json.dumps(ck))
+    logs3 = []
+    results3 = run_sweep(points, toolchain=tc,
+                         checkpoint=str(root / "ckpt.json"),
+                         log=logs3.append)
+    assert any("checkpoint: 1 variant" in s for s in logs3)
+    assert [r.to_json_dict() for r in results3] == \
+        [r.to_json_dict() for r in results]
+
+    # a stale/corrupt checkpoint is ignored, not fatal
+    (root / "ckpt.json").write_text("{ not json")
+    results4 = run_sweep(points, toolchain=tc,
+                         checkpoint=str(root / "ckpt.json"))
+    assert [r.to_json_dict() for r in results4] == \
+        [r.to_json_dict() for r in results]
+
+    # a --no-verify checkpoint must not satisfy a verifying sweep: the
+    # fingerprint includes the verify flag, so nothing is skipped
+    run_sweep(points[:1], toolchain=tc,
+              checkpoint=str(root / "ckpt2.json"), verify=False)
+    logs5 = []
+    run_sweep(points[:1], toolchain=tc,
+              checkpoint=str(root / "ckpt2.json"), log=logs5.append)
+    assert not any("checkpoint" in s for s in logs5)
+
+
+def test_bench_rows_cover_verified_variants(swept):
+    _root, points, _tc, results, _logs = swept
+    from repro.dse import sweep_bench_rows
+    rows = sweep_bench_rows(results)
+    assert [r["name"] for r in rows] == [p.name for p in points]
+    for row in rows:
+        assert row["us"] > 0
+        assert row["derived"]["mapped"] == len(SUITE_KERNELS)
+        assert row["derived"]["pareto"] in (0, 1)
