@@ -296,6 +296,47 @@ def bench_dse_sweep() -> List[Dict]:
         shutil.rmtree(cache, ignore_errors=True)
 
 
+def bench_serve_decode() -> List[Dict]:
+    """End-to-end CGRA-backed serving on shrunken configs: build a
+    ServePlan (feasible tiles, compile_many, one site spot-checked
+    bit-exactly against the cycle-accurate simulator), then run a seeded
+    Poisson traffic episode through the engine on plan-derived latency.
+    Rows carry the *modeled* episode duration and throughput —
+    byte-deterministic given the seed, so the regression comparator gates
+    plan/cost-model quality, not host wall clock."""
+    import jax
+    from repro.configs.registry import serve_smoke_config
+    from repro.core.toolchain import Toolchain
+    from repro.models.zoo import build_model
+    from repro.serve.engine import Engine
+    from repro.serve.plan import CGRAExecutionModel, build_serve_plan
+    from repro.serve.traffic import (TrafficConfig, report_bench_rows,
+                                     run_traffic)
+
+    cache = tempfile.mkdtemp(prefix="morpher-serve-bench-")
+    rows: List[Dict] = []
+    try:
+        tc = Toolchain(cache_dir=cache)
+        for arch_id in ("llama3.2-1b", "rwkv6-1.6b"):
+            cfg = serve_smoke_config(arch_id)
+            plan = build_serve_plan(cfg, toolchain=tc)
+            model = build_model(cfg)
+            params = model.init(jax.random.PRNGKey(0))
+            eng = Engine(model, params, batch=4, max_len=48,
+                         exec_model=CGRAExecutionModel(plan))
+            report = run_traffic(
+                eng, TrafficConfig(seed=0, n_requests=12,
+                                   arrival_rate=100.0), cfg.vocab)
+            rows += report_bench_rows(report,
+                                      name=f"serve_decode_{arch_id}",
+                                      sites=len(plan.sites),
+                                      tiles=len(plan.kernels))
+        _print_rows(rows)
+        return rows
+    finally:
+        shutil.rmtree(cache, ignore_errors=True)
+
+
 BENCHES = {
     "table1": ("Table I (paper reproduction)", bench_table1),
     "frontend_trace": ("frontend DSL tracing overhead (vs warm compile)",
@@ -311,6 +352,8 @@ BENCHES = {
                        bench_verify_batched),
     "dse_sweep": ("tiny design-space sweep (repro.dse, modeled latency)",
                   bench_dse_sweep),
+    "serve_decode": ("CGRA-backed serving traffic episode (modeled)",
+                     bench_serve_decode),
 }
 
 

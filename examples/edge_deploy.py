@@ -43,21 +43,24 @@ def load_arch_file(path: str) -> CGRAArch:
 def report_arch(arch_id: str, tokens: int, toolchain: Toolchain) -> None:
     cfg = get_config(arch_id)
     print(f"arch: {arch_id} ({cfg.family}); "
-          f"per-layer GEMM sites at {tokens} tokens:")
+          f"GEMM sites at {tokens} tokens:")
     for s in model_gemm_sites(cfg, tokens):
-        print(f"  {s.name:<10} {s.M}x{s.K}x{s.N}  x{s.count_per_layer}")
+        print(f"  {s.name:<14} {s.M}x{s.K}x{s.N}  x{s.count_per_layer} "
+              f"in {s.n_layers(cfg)} layers")
 
-    print("\nCGRA mapping of the shared on-chip tile "
-          "(16x8x16, output-stationary, unroll 4):")
+    print("\nCGRA mapping (per-site bank-capacity-feasible tiles, "
+          "output-stationary):")
     t0 = time.time()
     reports = analyze_arch_gemms(arch_id, tokens=tokens,
                                  toolchain=toolchain)
     dt = time.time() - t0
-    print(f"{'site':<10} {'nodes':>5} {'II':>3} {'MII':>4} {'util':>7} "
-          f"{'tile_us':>8}")
+    print(f"{'site':<14} {'tile':>8} {'II':>3} {'MII':>4} {'util':>7} "
+          f"{'tile_us':>8} {'tiles':>7} {'xinst':>6} {'site_ms':>10}")
     for r in reports:
-        print(f"{r.site:<10} {r.nodes:>5} {r.II:>3} {r.mii:>4} "
-              f"{r.utilization*100:6.1f}% {r.est_tile_us:8.1f}")
+        tile = "x".join(str(t) for t in r.tile)
+        print(f"{r.site:<14} {tile:>8} {r.II:>3} {r.mii:>4} "
+              f"{r.utilization*100:6.1f}% {r.est_tile_us:8.1f} "
+              f"{r.tiles:>7} {r.instances:>6} {r.est_site_ms:10.3f}")
     print(f"# analyzed in {dt*1e3:.0f} ms (compiles are cache hits after "
           f"the first)")
 

@@ -35,6 +35,15 @@ def get_config(arch_id: str) -> ModelConfig:
     return mod.CONFIG
 
 
+def serve_smoke_config(arch_id: str) -> ModelConfig:
+    """Shrunken same-family config for serve smoke runs (CI serve-smoke,
+    the serve_decode benchmark, tests): the reduced() CPU config, renamed
+    so serve-plan artifacts can't be mistaken for the full model's."""
+    import dataclasses
+    cfg = get_config(arch_id).reduced()
+    return dataclasses.replace(cfg, name=f"{cfg.name}-serve-smoke")
+
+
 @dataclass(frozen=True)
 class ShapeCell:
     name: str

@@ -57,6 +57,12 @@ class ModelConfig:
         return self.head_dim or self.d_model // self.n_heads
 
     @property
+    def decay_lora_rank(self) -> int:
+        """RWKV6 data-dependent decay LoRA rank (the Finch heuristic);
+        shared by the layer init and the GEMM-site enumeration."""
+        return max(32, self.d_model // 32)
+
+    @property
     def sub_quadratic(self) -> bool:
         """Can this arch decode at 500k+ context (O(1)-state recurrence)?"""
         return self.family in ("ssm", "hybrid")

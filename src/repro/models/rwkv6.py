@@ -21,7 +21,7 @@ def init_rwkv6_block(key, cfg: ModelConfig) -> Dict:
     H = cfg.n_heads
     D = d // H
     ks = jax.random.split(key, 10)
-    lora = max(32, d // 32)
+    lora = cfg.decay_lora_rank
     return {
         "ln1": jnp.ones((d,), jnp.float32),
         "ln2": jnp.ones((d,), jnp.float32),

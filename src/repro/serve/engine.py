@@ -3,6 +3,13 @@
 Slots hold independent requests; each engine step decodes one token for
 every active slot (the decode_32k dry-run shape is exactly one engine
 step at full batch).  Prefill admits new requests into free slots.
+
+The engine optionally carries an *execution model* (e.g.
+``repro.serve.plan.CGRAExecutionModel``): the real JAX forward pass still
+produces the tokens, while the execution model advances ``clock_s`` — the
+modeled wall clock of running every prefill/decode step on the plan's
+CGRA fabric.  The traffic harness (``repro.serve.traffic``) schedules
+Poisson arrivals against that clock.
 """
 from __future__ import annotations
 
@@ -23,21 +30,56 @@ class Request:
     max_new: int
     out: List[int] = field(default_factory=list)
     done: bool = False
+    truncated: bool = False
 
 
 class Engine:
-    def __init__(self, model: Model, params: Any, batch: int, max_len: int):
+    def __init__(self, model: Model, params: Any, batch: int, max_len: int,
+                 exec_model: Optional[Any] = None):
         self.model = model
         self.params = params
         self.batch = batch
         self.max_len = max_len
+        self.exec_model = exec_model
+        self.clock_s = 0.0           # modeled time (advances only if exec_model)
         self.caches = model.init_cache(batch, max_len)
         self.lengths = np.zeros((batch,), np.int32)
         self.last_tok = np.zeros((batch,), np.int32)
         self.slots: List[Optional[Request]] = [None] * batch
         self._decode = jax.jit(model.decode)
 
-    def admit(self, req: Request) -> bool:
+    # -------------------------------------------------------------- slots
+    @property
+    def n_active(self) -> int:
+        return sum(1 for s in self.slots if s is not None)
+
+    def has_free_slot(self) -> bool:
+        return any(s is None for s in self.slots)
+
+    def advance_clock(self, t: float) -> None:
+        """Idle until modeled time ``t`` (never runs the clock backward)."""
+        self.clock_s = max(self.clock_s, t)
+
+    # ---------------------------------------------------------- admission
+    def admit(self, req: Request, truncate: bool = False) -> bool:
+        """Prefill ``req`` into a free slot.  Returns False when every
+        slot is busy (the caller queues and retries — slots are recycled
+        as requests finish).
+
+        Prompts longer than the KV budget no longer overflow silently:
+        a prompt needing ``>= max_len`` positions (one must stay free for
+        decode) is truncated to its last ``max_len - 1`` tokens when
+        ``truncate=True``, and rejected with ValueError otherwise."""
+        limit = self.max_len - 1
+        if len(req.prompt) > limit:
+            if not truncate:
+                raise ValueError(
+                    f"request {req.rid}: prompt of {len(req.prompt)} tokens "
+                    f"cannot fit max_len={self.max_len} (needs <= {limit} "
+                    f"to leave a decode position); pass truncate=True to "
+                    f"keep the last {limit} tokens")
+            req.prompt = np.asarray(req.prompt[-limit:])
+            req.truncated = True
         for i, s in enumerate(self.slots):
             if s is None:
                 self.slots[i] = req
@@ -48,6 +90,9 @@ class Engine:
                 self._merge_cache(i, caches, len(req.prompt))
                 self.lengths[i] = len(req.prompt)
                 self.last_tok[i] = int(jnp.argmax(logits[0, -1]))
+                if self.exec_model is not None:
+                    self.clock_s += self.exec_model.prefill_s(
+                        len(req.prompt))
                 return True
         return False
 
@@ -69,8 +114,11 @@ class Engine:
             return full
         self.caches = jax.tree.map(merge, self.caches, caches)
 
+    # --------------------------------------------------------------- step
     def step(self) -> Dict[int, int]:
-        """One decode step for all active slots; returns {rid: token}."""
+        """One decode step for all active slots; returns {rid: token}.
+        Finished requests free their slot (state zeroed) so admission
+        under slot pressure recycles capacity."""
         active = [i for i, s in enumerate(self.slots) if s is not None]
         if not active:
             return {}
@@ -79,6 +127,8 @@ class Engine:
         lens = jnp.asarray(self.lengths + 1)
         logits, self.caches = self._decode(self.params, self.caches, toks,
                                            pos, lens)
+        if self.exec_model is not None:
+            self.clock_s += self.exec_model.decode_step_s(len(active))
         nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
         out: Dict[int, int] = {}
         for i in active:
@@ -91,4 +141,6 @@ class Engine:
             if len(req.out) >= req.max_new or self.lengths[i] >= self.max_len:
                 req.done = True
                 self.slots[i] = None
+                self.lengths[i] = 0
+                self.last_tok[i] = 0
         return out

@@ -1,0 +1,322 @@
+"""repro.serve tests: engine admit/step/done lifecycle and admission
+robustness, ServePlan build + lossless JSON round-trip + cycle-accurate
+spot-check, family-aware GEMM-site enumeration with feasible tiling, and
+seeded-traffic determinism (two runs byte-identical)."""
+import dataclasses
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config, serve_smoke_config
+from repro.core.adl import cluster_4x4
+from repro.core.offload import (GemmSite, analyze_arch_gemms,
+                                choose_gemm_tile, model_gemm_sites,
+                                site_tile_count, tile_unroll)
+from repro.core.toolchain import Toolchain
+from repro.models.zoo import build_model
+from repro.serve.engine import Engine, Request
+from repro.serve.plan import (CGRAExecutionModel, ServePlan,
+                              build_serve_plan)
+from repro.serve.traffic import (FixedLatencyModel, TrafficConfig,
+                                 generate_requests, report_json,
+                                 run_traffic)
+
+CFG = serve_smoke_config("llama3.2-1b")
+
+
+@pytest.fixture(scope="module")
+def model_params():
+    model = build_model(CFG)
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def tc():
+    return Toolchain(cache_dir="")
+
+
+@pytest.fixture(scope="module")
+def plan(tc):
+    return build_serve_plan(CFG, toolchain=tc, spot_check=False)
+
+
+def make_engine(model_params, batch=2, max_len=16, exec_model=None):
+    model, params = model_params
+    return Engine(model, params, batch=batch, max_len=max_len,
+                  exec_model=exec_model)
+
+
+def req(rid, plen, max_new, vocab=None, seed=0):
+    rng = np.random.default_rng(seed + rid)
+    return Request(rid=rid, prompt=rng.integers(0, vocab or CFG.vocab,
+                                                size=(plen,)),
+                   max_new=max_new)
+
+
+# ----------------------------------------------------------------- engine
+def test_engine_lifecycle(model_params):
+    eng = make_engine(model_params)
+    r = req(0, plen=4, max_new=3)
+    assert eng.admit(r)
+    assert eng.n_active == 1 and eng.has_free_slot()
+    toks = []
+    while not r.done:
+        out = eng.step()
+        assert set(out) == {0}
+        toks.append(out[0])
+    assert r.out == toks and len(r.out) == 3
+    assert eng.n_active == 0          # finished request freed its slot
+    assert eng.step() == {}
+
+
+def test_admit_rejects_overlong_prompt(model_params):
+    eng = make_engine(model_params, max_len=8)
+    with pytest.raises(ValueError, match="cannot fit max_len"):
+        eng.admit(req(0, plen=8, max_new=2))     # needs a decode position
+    assert eng.n_active == 0
+
+    r = req(1, plen=12, max_new=2)
+    tail = np.asarray(r.prompt[-7:])
+    assert eng.admit(r, truncate=True)
+    assert r.truncated and len(r.prompt) == 7
+    np.testing.assert_array_equal(r.prompt, tail)   # keeps the tail
+    while not r.done:
+        eng.step()
+    assert len(r.out) == 1            # 7 prompt + 1 decoded == max_len
+
+
+def test_decode_stops_at_kv_budget(model_params):
+    """A request whose decode budget exceeds the KV cache ends at
+    max_len instead of silently overflowing."""
+    eng = make_engine(model_params, batch=1, max_len=8)
+    r = req(0, plen=5, max_new=100)
+    assert eng.admit(r)
+    steps = 0
+    while not r.done:
+        eng.step()
+        steps += 1
+        assert steps <= 8
+    assert len(r.out) == 3            # 5 prompt + 3 decoded == max_len
+
+
+def test_slot_recycling_under_pressure(model_params):
+    eng = make_engine(model_params, batch=1)
+    r1, r2 = req(1, plen=3, max_new=2), req(2, plen=3, max_new=2)
+    assert eng.admit(r1)
+    assert not eng.admit(r2)          # slot pressure: queued by caller
+    while not r1.done:
+        eng.step()
+    assert eng.has_free_slot()        # capacity recycled
+    assert eng.admit(r2)
+    while not r2.done:
+        eng.step()
+    assert len(r2.out) == 2
+
+
+def test_engine_clock_tracks_exec_model(model_params):
+    em = FixedLatencyModel(decode_step_us=1000.0, prefill_us_per_token=100.0)
+    eng = make_engine(model_params, exec_model=em)
+    assert eng.clock_s == 0.0
+    eng.admit(req(0, plen=4, max_new=2))
+    assert eng.clock_s == pytest.approx(4 * 100e-6)
+    eng.step()
+    assert eng.clock_s == pytest.approx(4 * 100e-6 + 1000e-6)
+    eng.advance_clock(1.0)
+    assert eng.clock_s == 1.0
+    eng.advance_clock(0.5)            # never backward
+    assert eng.clock_s == 1.0
+
+
+# ------------------------------------------------- site enumeration/tiling
+def test_model_gemm_sites_families():
+    ssm = {s.name for s in model_gemm_sites(get_config("rwkv6-1.6b"))}
+    assert "tmix_rkvo" in ssm and "cmix_in" in ssm and "q_proj" not in ssm
+
+    hyb_cfg = get_config("zamba2-1.2b")
+    hyb = {s.name: s for s in model_gemm_sites(hyb_cfg)}
+    assert "mamba_in" in hyb and "shared_q" in hyb
+    # the shared attention block runs n_layers // attn_every times
+    assert (hyb["shared_q"].n_layers(hyb_cfg)
+            == hyb_cfg.n_layers // hyb_cfg.attn_every)
+    assert hyb["mamba_in"].n_layers(hyb_cfg) == hyb_cfg.n_layers
+
+    moe_cfg = get_config("deepseek-v3-671b")
+    moe = {s.name: s for s in model_gemm_sites(moe_cfg)}
+    assert "q_lora" in moe and "expert_ffn_in" in moe
+    active = moe_cfg.top_k + moe_cfg.n_shared_experts
+    assert moe["expert_ffn_in"].count_per_layer == 2 * active
+    assert (moe["expert_ffn_in"].n_layers(moe_cfg)
+            == moe_cfg.n_layers - moe_cfg.first_k_dense)
+    assert moe["dense_ffn_in"].n_layers(moe_cfg) == moe_cfg.first_k_dense
+
+
+def test_choose_tile_clamps_and_falls_back():
+    arch = cluster_4x4()
+    assert choose_gemm_tile(arch) == (16, 8, 16)
+    # small sites clamp the tile to their dims
+    small = GemmSite("lora", M=3, K=2, N=5)
+    TI, TK, TJ = choose_gemm_tile(arch, small)
+    assert (TI, TK, TJ) == (3, 2, 5)
+    assert tile_unroll(TK) == 2
+    # capacity-infeasible ladder heads fall through deterministically
+    tiny = cluster_4x4(bank_kb=1)
+    assert choose_gemm_tile(tiny, ladder=((64, 64, 64), (4, 4, 4))) \
+        == (4, 4, 4)
+    assert site_tile_count(GemmSite("s", 64, 2048, 512),
+                           (16, 8, 16)) == 4 * 256 * 32
+
+
+def test_analyze_arch_gemms_scales_full_site(tc):
+    reports = analyze_arch_gemms("llama3.2-1b", max_kernels=3,
+                                 toolchain=tc)
+    cfg = get_config("llama3.2-1b")
+    sites = model_gemm_sites(cfg)[:3]
+    assert [r.site for r in reports] == [s.name for s in sites]
+    for r, s in zip(reports, sites):
+        assert r.tiles == site_tile_count(s, r.tile)
+        assert r.instances == s.count_per_layer * cfg.n_layers
+        assert r.est_site_ms == pytest.approx(
+            r.tiles * r.instances * r.est_tile_us / 1e3)
+    # q_proj and kv_proj share a compiled tile but differ in site latency
+    by = {r.site: r for r in reports}
+    assert by["q_proj"].est_tile_us == by["kv_proj"].est_tile_us
+    assert by["q_proj"].est_site_ms != by["kv_proj"].est_site_ms
+
+
+# ------------------------------------------------------------------- plan
+def test_plan_covers_every_site(plan):
+    expected = [s.name for s in model_gemm_sites(CFG)]
+    assert [s.name for s in plan.sites] == expected
+    assert plan.model == CFG.name
+    for s in plan.sites:
+        ck = plan.kernel_for(s)
+        assert ck.cache_key == s.kernel_ref
+        assert s.II >= s.mii >= 1
+        assert s.tile_cycles == (len(ck.invocations)
+                                 * ck.schedule_cycles())
+        assert s.latency_s() > 0
+
+
+def test_plan_json_roundtrip_lossless(plan):
+    blob = plan.to_json()
+    plan2 = ServePlan.from_json(blob)
+    assert plan2.to_json() == blob               # byte-identical
+    assert [s for s in plan2.sites] == [s for s in plan.sites]
+    assert plan2.decode_step_s(4) == plan.decode_step_s(4)
+    # version guard
+    bad = json.dumps({**json.loads(blob), "version": 99})
+    with pytest.raises(ValueError, match="version"):
+        ServePlan.from_json(bad)
+
+
+def test_plan_ref_only_roundtrip_resolves_via_toolchain(plan, tc):
+    blob = plan.to_json(embed_kernels=False)
+    assert len(blob) < len(plan.to_json())
+    orphan = ServePlan.from_json(blob)           # no toolchain: refs dangle
+    with pytest.raises(KeyError, match="not bundled"):
+        orphan.kernel_for(orphan.sites[0])
+    resolved = ServePlan.from_json(blob, toolchain=tc)
+    ck = resolved.kernel_for(resolved.sites[0])
+    assert ck.cache_key == resolved.sites[0].kernel_ref
+
+
+def test_plan_spot_check_cycle_accurate(plan):
+    checked = plan.spot_check(seeds=(0, 1))
+    assert len(checked) >= 1 and checked[0] == plan.sites[0].name
+    # a reloaded plan spot-checks too (DFG reference-execution oracle)
+    reloaded = ServePlan.from_json(plan.to_json())
+    assert reloaded.spot_check() == checked[:1]
+
+
+def test_exec_model_latency(plan):
+    em = CGRAExecutionModel(plan)
+    assert em.decode_step_s(3) == pytest.approx(plan.step_latency_s(3))
+    assert em.decode_step_s(3) == em.decode_step_s(3)   # memoized path
+    assert em.prefill_s(0) == pytest.approx(plan.step_latency_s(1))
+    # more active slots can never be modeled faster
+    assert em.decode_step_s(17) >= em.decode_step_s(1)
+    with_overhead = CGRAExecutionModel(plan, overhead_s=1.0)
+    assert with_overhead.decode_step_s(1) == pytest.approx(
+        em.decode_step_s(1) + 1.0)
+
+
+# ---------------------------------------------------------------- traffic
+def test_generate_requests_seeded():
+    cfg = TrafficConfig(seed=7, n_requests=5)
+    a = generate_requests(cfg, vocab=64)
+    b = generate_requests(cfg, vocab=64)
+    assert [t for t, _r in a] == [t for t, _r in b]
+    assert all((x.prompt == y.prompt).all() for (_, x), (_, y) in zip(a, b))
+    assert [t for t, _ in a] == sorted(t for t, _ in a)
+    c = generate_requests(TrafficConfig(seed=8, n_requests=5), vocab=64)
+    assert [t for t, _ in a] != [t for t, _ in c]
+
+
+def test_traffic_requires_exec_model(model_params):
+    eng = make_engine(model_params)
+    with pytest.raises(ValueError, match="exec_model"):
+        run_traffic(eng, TrafficConfig(n_requests=1), CFG.vocab)
+
+
+def test_traffic_two_runs_byte_identical(model_params):
+    cfg = TrafficConfig(seed=3, n_requests=6, arrival_rate=500.0,
+                        prompt_len=(3, 8), max_new=(2, 5))
+
+    def episode():
+        eng = make_engine(model_params, batch=2, max_len=16,
+                          exec_model=FixedLatencyModel())
+        return report_json(run_traffic(eng, cfg, CFG.vocab))
+
+    first, second = episode(), episode()
+    assert first == second
+    report = json.loads(first)
+    assert report["served"] == 6 and report["rejected"] == 0
+    assert report["tokens_per_s"] > 0
+    assert 0 < report["slot_occupancy"]["mean"] <= 1
+
+
+def test_traffic_queueing_and_truncation(model_params):
+    # slot pressure: one slot, bursty arrivals -> nonzero queue wait
+    cfg = TrafficConfig(seed=0, n_requests=5, arrival_rate=1e4,
+                        prompt_len=(3, 6), max_new=(2, 3))
+    eng = make_engine(model_params, batch=1, max_len=16,
+                      exec_model=FixedLatencyModel())
+    rep = run_traffic(eng, cfg, CFG.vocab)
+    assert rep["served"] == 5
+    assert rep["queue_wait_ms"]["max"] > 0
+    assert rep["slot_occupancy"]["mean"] == 1.0
+
+    # overlong prompts: dropped without truncate, served with it
+    long_cfg = TrafficConfig(seed=0, n_requests=4, prompt_len=(20, 30),
+                             max_new=(1, 2), truncate=False)
+    eng = make_engine(model_params, batch=2, max_len=8,
+                      exec_model=FixedLatencyModel())
+    rep = run_traffic(eng, long_cfg, CFG.vocab)
+    assert rep["rejected"] == 4 and rep["served"] == 0
+
+    eng = make_engine(model_params, batch=2, max_len=8,
+                      exec_model=FixedLatencyModel())
+    rep = run_traffic(eng, dataclasses.replace(long_cfg, truncate=True),
+                      CFG.vocab)
+    assert rep["truncated"] == 4 and rep["served"] == 4
+
+
+def test_traffic_with_cgra_plan_deterministic(model_params, plan):
+    """The acceptance path: plan-modeled CGRA latency driving a Poisson
+    episode, byte-deterministic given the seed."""
+    cfg = TrafficConfig(seed=0, n_requests=4, arrival_rate=100.0,
+                        prompt_len=(3, 6), max_new=(2, 4))
+
+    def episode():
+        eng = make_engine(model_params, batch=2, max_len=16,
+                          exec_model=CGRAExecutionModel(plan))
+        return report_json(run_traffic(eng, cfg, CFG.vocab))
+
+    first, second = episode(), episode()
+    assert first == second
+    rep = json.loads(first)
+    assert rep["served"] == 4
+    # episode time is the plan's modeled clock, not host wall time
+    assert rep["episode_s"] > 0 and rep["tokens_per_s"] > 0
