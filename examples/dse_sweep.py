@@ -53,6 +53,20 @@ def main():
                     help="ignore any existing checkpoint")
     ap.add_argument("--no-verify", action="store_true",
                     help="skip simulation-based verification (score only)")
+    ap.add_argument("--workers", type=int, default=None, metavar="N",
+                    help="shard compile work units across N supervised "
+                         "worker groups (repro.dist.fleet: deadlines, "
+                         "retry, killed-worker recovery, work stealing)")
+    ap.add_argument("--inject-faults", action="store_true",
+                    help="deterministically kill one compile worker and "
+                         "delay one straggler past its deadline "
+                         "(repro.dist.faults); the sweep must still emit "
+                         "byte-identical artifacts")
+    ap.add_argument("--task-timeout-s", type=float, default=None,
+                    metavar="S",
+                    help="per-work-unit deadline (default: "
+                         "$MORPHER_TASK_TIMEOUT_S or 300; --inject-faults "
+                         "defaults it to 15 so the straggler is visible)")
     ap.add_argument("--cache-dir", default=None,
                     help="mapping cache dir (default: $MORPHER_CACHE_DIR "
                          "or ~/.cache/morpher-toolchain)")
@@ -72,15 +86,36 @@ def main():
         if os.path.exists(checkpoint):
             os.unlink(checkpoint)
 
+    fleet_cfg = None
+    if args.workers or args.inject_faults:
+        from repro.dist.faults import FaultPlan
+        from repro.dist.fleet import FleetConfig
+        timeout_s = args.task_timeout_s
+        faults = None
+        if args.inject_faults:
+            # one killed worker + one straggler sleeping past its
+            # deadline, fire-once each — the canonical disturbance the
+            # dist-smoke CI job byte-compares against the undisturbed
+            # baseline
+            timeout_s = timeout_s if timeout_s is not None else 15.0
+            faults = FaultPlan(kill_units=(1,),
+                               delay_units=((2, 2.5 * timeout_s),)).armed()
+            print(f"# fault injection: kill unit 1, delay unit 2 by "
+                  f"{2.5 * timeout_s:g}s (deadline {timeout_s:g}s)")
+        fleet_cfg = FleetConfig(groups=args.workers or 2,
+                                timeout_s=timeout_s, faults=faults)
+
     tc = Toolchain(options=MapperOptions(ii_max=args.ii_max),
                    cache_dir=args.cache_dir)
     seeds = list(range(args.seeds))
     print(f"# sweeping {len(points)} variants x ten kernels "
-          f"(space={args.space}, seeds={seeds})")
+          f"(space={args.space}, seeds={seeds}"
+          + (f", workers={fleet_cfg.groups}" if fleet_cfg else "") + ")")
     t0 = time.time()
     results = run_sweep(points, seeds=seeds, toolchain=tc,
                         checkpoint=checkpoint, jobs=args.jobs,
-                        verify=not args.no_verify, log=print)
+                        verify=not args.no_verify, fleet=fleet_cfg,
+                        log=print)
     dt = time.time() - t0
 
     print()

@@ -54,11 +54,20 @@ def _spawnable_main() -> bool:
 
 def shared_pool() -> Optional[ProcessPoolExecutor]:
     """The process-wide worker pool, or None when process fan-out is
-    unavailable in this context (nested worker, REPL main, sandbox)."""
+    unavailable in this context (nested worker, REPL main, sandbox).
+
+    A pool whose worker died (OS kill, OOM) marks itself broken and
+    would poison every later call with ``BrokenProcessPool`` — it is
+    detected here and replaced, so one lost worker costs one rebuild,
+    not the rest of the process lifetime.
+    """
     global _shared
     if in_worker() or not _spawnable_main():
         return None
     with _lock:
+        if _shared is not None and getattr(_shared, "_broken", False):
+            ex, _shared = _shared, None
+            ex.shutdown(wait=False, cancel_futures=True)
         if _shared is None:
             methods = multiprocessing.get_all_start_methods()
             method = "forkserver" if "forkserver" in methods else "spawn"
@@ -72,13 +81,27 @@ def shared_pool() -> Optional[ProcessPoolExecutor]:
         return _shared
 
 
-def reset_pool() -> None:
-    """Drop a broken pool; the next ``shared_pool()`` builds a fresh one."""
+def reset_pool(kill: bool = False) -> None:
+    """Drop a broken pool; the next ``shared_pool()`` builds a fresh one.
+
+    ``kill=True`` also terminates the worker processes — needed when a
+    straggler is still executing an orphaned task (a sleeping worker
+    would otherwise stall interpreter exit on the executor's atexit
+    join).  Tasks are idempotent by contract, so a terminated worker
+    loses nothing that a retry cannot recompute.
+    """
     global _shared
     with _lock:
         ex, _shared = _shared, None
-    if ex is not None:
-        ex.shutdown(wait=False, cancel_futures=True)
+    if ex is None:
+        return
+    if kill:
+        try:
+            for proc in list(getattr(ex, "_processes", {}).values()):
+                proc.terminate()
+        except Exception:
+            pass  # best effort: shutdown below still detaches the pool
+    ex.shutdown(wait=False, cancel_futures=True)
 
 
 def process_map(fn: Callable, payloads: Sequence, jobs: Optional[int] = None
@@ -90,27 +113,39 @@ def process_map(fn: Callable, payloads: Sequence, jobs: Optional[int] = None
     pool size caps *in-flight* tasks at ``jobs`` (the pool itself is sized
     to the machine, but a caller-requested concurrency limit is honored by
     windowed submission).
+
+    A killed worker (``BrokenProcessPool``) gets one recovery attempt:
+    the pool is rebuilt and the whole batch retried — payloads must be
+    idempotent, which compile units are by content-addressing.  If the
+    fresh pool breaks too, the fault is the workload's, not transient:
+    reset and return None so the caller's sequential path decides.
     """
     if len(payloads) < 2 or (jobs is not None and jobs < 2):
         return None
     ex = shared_pool()
     if ex is None:
         return None
-    try:
-        if jobs is None or jobs >= len(payloads):
-            return list(ex.map(fn, payloads))
-        results: list = []
-        window = [ex.submit(fn, p) for p in payloads[:jobs]]
-        nxt = jobs
-        while window:
-            results.append(window.pop(0).result())
-            if nxt < len(payloads):
-                window.append(ex.submit(fn, payloads[nxt]))
-                nxt += 1
-        return results
-    except BrokenProcessPool:
-        reset_pool()
-        return None
+    for attempt in (0, 1):
+        try:
+            if jobs is None or jobs >= len(payloads):
+                return list(ex.map(fn, payloads))
+            results: list = []
+            window = [ex.submit(fn, p) for p in payloads[:jobs]]
+            nxt = jobs
+            while window:
+                results.append(window.pop(0).result())
+                if nxt < len(payloads):
+                    window.append(ex.submit(fn, payloads[nxt]))
+                    nxt += 1
+            return results
+        except BrokenProcessPool:
+            reset_pool(kill=True)
+            if attempt == 1:
+                return None
+            ex = shared_pool()   # one retry on a fresh pool
+            if ex is None:
+                return None
+    return None
 
 
 def submit_all(fn: Callable, payloads: Sequence) -> Optional[List[Future]]:

@@ -49,7 +49,6 @@ from .dfg import DFG
 from .kernels_lib import KernelSpec
 from .layout import DataLayout
 from .mapper import MapError, Mapping, MapperOptions, map_kernel_opts
-from .pool import process_map
 
 # v2: SimConfig.bank_offsets became an id-keyed mapping (banks are
 # identified by MemBank.id, not list position) — v1 artifacts are
@@ -330,6 +329,10 @@ class Toolchain:
         self._memo: Dict[str, CompiledKernel] = {}
         self._memo_err: Dict[str, str] = {}
         self._lock = threading.Lock()
+        # recovery ledger of the most recent compile_many fan-out (a
+        # dist.fleet.FleetReport), None before the first one / after a
+        # FleetError degradation — sweeps surface it in their logs
+        self.last_fleet_report = None
 
     # ----------------------------------------------------------- cache I/O
     def _cache_path(self, key: str) -> Optional[str]:
@@ -532,7 +535,8 @@ class Toolchain:
                      options: Optional[MapperOptions] = None,
                      jobs: Optional[int] = None,
                      use_cache: bool = True,
-                     allow_unmapped: bool = False
+                     allow_unmapped: bool = False,
+                     fleet=None
                      ) -> List[Optional[CompiledKernel]]:
         """Fan independent kernel compiles out across worker processes.
 
@@ -542,6 +546,18 @@ class Toolchain:
         through its JSON form (specs carry unpicklable closures; their
         structural parts round-trip losslessly).  Falls back to sequential
         in-process compiles if no process pool is available.
+
+        The fan-out runs through the supervised fleet runner
+        (:func:`repro.dist.fleet.run_fleet`): every compile unit gets a
+        deadline (``MORPHER_TASK_TIMEOUT_S``), bounded deterministic
+        retry, and transparent recovery from killed workers — a lost
+        worker re-queues its units on a rebuilt pool instead of crashing
+        the sweep.  Content-addressing makes units idempotent, so
+        recovery is exact.  Pass a ``fleet``
+        :class:`~repro.dist.fleet.FleetConfig` to shard units across
+        worker groups (elastic membership, work stealing) or to inject
+        faults; the last run's recovery ledger is on
+        ``self.last_fleet_report``.
 
         Specs may target heterogeneous architectures — each compile carries
         its own arch — which is how design-space sweeps fan one kernel
@@ -555,6 +571,7 @@ class Toolchain:
         """
         specs = [self._bind(s) for s in specs]
         opt = options or self.options
+        self.last_fleet_report = None   # set again iff a fan-out runs
         keys = [spec_cache_key(s, opt) for s in specs]
         results: List[Optional[CompiledKernel]] = [None] * len(specs)
         todo: Dict[str, List[int]] = {}      # cache_key -> spec indices
@@ -584,6 +601,11 @@ class Toolchain:
 
         if jobs is None:
             jobs = min(len(todo), os.cpu_count() or 1) or 1
+        if fleet is not None:
+            # an explicit fleet config is a request to shard: even a
+            # 1-CPU host runs the supervised fan-out so fault injection
+            # and the recovery paths behave identically everywhere
+            jobs = max(jobs, fleet.groups)
         order = list(todo.items())
         if len(order) > 1 and jobs > 1:
             payloads = [json.dumps({
@@ -592,10 +614,25 @@ class Toolchain:
                 "layout": specs[idxs[0]].layout.to_json_dict(),
                 "options": opt.to_json_dict(),
             }) for _key, idxs in order]
-            # the shared pool handles start-method selection (forkserver
-            # over fork/spawn), REPL-driver detection, and nested-worker
-            # suppression; None means no fan-out here — go sequential
-            outs = process_map(_compile_worker, payloads, jobs=jobs)
+            # the supervised fleet runner sits on the shared pool (which
+            # handles start-method selection, REPL-driver detection and
+            # nested-worker suppression) and adds deadlines, retry and
+            # killed-worker recovery; results=None means no fan-out is
+            # available here — go sequential.  A unit failing past its
+            # retry budget (FleetError) degrades the same way: the
+            # sequential path is bit-identical by contract.
+            from ..dist.fleet import FleetConfig, FleetError, run_fleet
+            fcfg = fleet if fleet is not None else FleetConfig()
+            if fcfg.max_inflight is None:
+                import dataclasses
+                fcfg = dataclasses.replace(fcfg, max_inflight=jobs)
+            try:
+                report = run_fleet(_compile_worker, payloads, fcfg,
+                                   inline_fallback=False)
+                outs = report.results
+            except FleetError:
+                report, outs = None, None
+            self.last_fleet_report = report
             if outs is not None:
                 for (key, idxs), out in zip(order, outs):
                     d = json.loads(out)
@@ -626,15 +663,23 @@ class Toolchain:
 
     def verify_many(self, kernels: Iterable, seeds: Sequence[int] = (0,),
                     check_dfg: bool = True,
-                    jobs: Optional[int] = None) -> List[CompiledKernel]:
+                    jobs: Optional[int] = None,
+                    fleet=None) -> List[CompiledKernel]:
         """Batch-verify many kernels over many seeds — the verification-
         fleet entry point.
 
         ``kernels`` may mix :class:`CompiledKernel` artifacts, specs and
         arch-deferred frontend programs; anything uncompiled goes through
-        ``compile_many`` first.  Each kernel then verifies every seed in
-        one ``verify_batch`` pass, sharing the process-wide simulator
-        executable cache, so the whole sweep costs a handful of XLA traces.
+        ``compile_many`` first — that process fan-out is the fleet-
+        supervised stage (pass a ``fleet``
+        :class:`~repro.dist.fleet.FleetConfig` to shard it across worker
+        groups / inject faults; a lost worker re-queues its compile units
+        instead of crashing the fleet).  Each kernel then verifies every
+        seed in one ``verify_batch`` pass *in this process*: simulation
+        rides the process-wide shape-bucketed XLA executable cache and
+        the spec's golden-model oracle, both of which a child process
+        would have to rebuild — and the bit-exactness contract pins this
+        path, so it must not silently swap oracles under distribution.
         Raises AssertionError on the first mismatch; returns the compiled
         kernels in input order.
         """
@@ -643,7 +688,7 @@ class Toolchain:
             k if isinstance(k, CompiledKernel) else None for k in items]
         todo = [k for k, ck in zip(items, compiled) if ck is None]
         if todo:
-            done = iter(self.compile_many(todo, jobs=jobs))
+            done = iter(self.compile_many(todo, jobs=jobs, fleet=fleet))
             compiled = [ck if ck is not None else next(done)
                         for ck in compiled]
         for ck in compiled:

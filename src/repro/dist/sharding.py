@@ -1,0 +1,152 @@
+"""Sharding rules: shape -> PartitionSpec for params, batches and caches.
+
+One policy, applied everywhere (``launch/specs.py`` builds every
+dry-run input through these):
+
+  * model parallelism ("model" axis) goes to the feature-like dimension
+    — the last axis of a weight matrix, the expert axis of a MoE stack,
+    the kv-heads axis of a cache (falling back to the sequence axis for
+    MQA, where kv-heads is indivisible);
+  * data parallelism ("data", composed with "pod" on multi-pod meshes)
+    goes to the leading batch-like dimension;
+  * an axis is only sharded when the mesh axis size divides it exactly —
+    anything indivisible is replicated, never padded.  Rules degrade to
+    full replication (all-None specs) rather than failing, so a config
+    that fits one mesh never crashes the planner on another.
+
+The functions accept any object with ``devices`` (ndarray) and
+``axis_names`` — a real ``jax.sharding.Mesh`` or a test double.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+AxisEntry = Union[None, str, Tuple[str, ...]]
+
+
+def _axis_sizes(mesh: Any) -> dict:
+    return dict(zip(tuple(mesh.axis_names), mesh.devices.shape))
+
+
+def _data_axis(mesh: Any, dim: int) -> AxisEntry:
+    """The largest data-parallel axis (combo) that divides ``dim``:
+    ("pod", "data") on multi-pod meshes, then "data", then "pod"."""
+    sizes = _axis_sizes(mesh)
+    candidates = []
+    if "pod" in sizes and "data" in sizes:
+        candidates.append((("pod", "data"), sizes["pod"] * sizes["data"]))
+    if "data" in sizes:
+        candidates.append(("data", sizes["data"]))
+    if "pod" in sizes:
+        candidates.append(("pod", sizes["pod"]))
+    for axis, n in candidates:
+        if n > 1 and dim % n == 0:
+            return axis
+    return None
+
+
+def param_spec(shape: Sequence[int], mesh: Any, stacked: bool = False,
+               expert: bool = False) -> P:
+    """PartitionSpec for one parameter tensor.
+
+    stacked: leading axis is a scanned layer stack — never sharded (every
+             device owns every layer's shard of its slice).
+    expert:  leading (post-stack) axis enumerates MoE experts — expert
+             parallelism maps it onto the "model" axis.
+    """
+    shape = tuple(shape)
+    sizes = _axis_sizes(mesh)
+    mp = sizes.get("model", 1)
+    spec: list = [None] * len(shape)
+    dims = list(range(len(shape)))
+    if stacked and dims:
+        dims = dims[1:]
+
+    model_used = False
+    if expert and dims:
+        d = dims[0]
+        if mp > 1 and shape[d] % mp == 0:
+            spec[d] = "model"
+            model_used = True
+        dims = dims[1:]
+    if not model_used and dims and mp > 1 and shape[dims[-1]] % mp == 0:
+        spec[dims[-1]] = "model"
+        model_used = True
+        dims = dims[:-1]
+
+    for d in dims:  # FSDP-style: first remaining dim the dp size divides
+        axis = _data_axis(mesh, shape[d])
+        if axis is not None:
+            spec[d] = axis
+            break
+    return P(*spec)
+
+
+def batch_spec(shape: Sequence[int], mesh: Any) -> P:
+    """PartitionSpec for an activation/batch tensor: leading dim across
+    the data-parallel axes when divisible, everything else replicated."""
+    shape = tuple(shape)
+    spec: list = [None] * len(shape)
+    if shape:
+        spec[0] = _data_axis(mesh, shape[0])
+    return P(*spec)
+
+
+def cache_spec(shape: Sequence[int], mesh: Any) -> P:
+    """PartitionSpec for a KV/state cache laid out ``(..., batch, heads,
+    seq, head_dim)`` (a leading stacked-layers axis is fine).
+
+    Heads shard on "model"; with indivisible heads (MQA/GQA down to
+    kv=1) the sequence axis takes "model" instead — a cache too big for
+    one device must still spread.  The batch axis shards on data.
+    """
+    shape = tuple(shape)
+    r = len(shape)
+    spec: list = [None] * r
+    sizes = _axis_sizes(mesh)
+    mp = sizes.get("model", 1)
+    if mp > 1:
+        for d in (r - 3, r - 2):  # heads first, then sequence
+            if 0 <= d and shape[d] % mp == 0:
+                spec[d] = "model"
+                break
+    b = r - 4 if r >= 4 else 0
+    if 0 <= b < r and spec[b] is None:
+        spec[b] = _data_axis(mesh, shape[b])
+    return P(*spec)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        parts.append(str(getattr(k, "key", getattr(k, "idx", k))))
+    return "/".join(parts).lower()
+
+
+def params_shardings(tree: Any, mesh: Any) -> Any:
+    """Pytree of PartitionSpecs for a parameter pytree (leaves are arrays
+    or ShapeDtypeStructs).  Stacked-layer and expert axes are recognized
+    from the leaf's key path (scan stacks live under layers/blocks/stack
+    keys; expert tensors under experts/moe keys) plus rank."""
+    def spec_for(path, leaf) -> P:
+        name = _path_str(path)
+        shape = tuple(leaf.shape)
+        expert = ("expert" in name or "moe" in name) and len(shape) >= 2
+        stacked = (len(shape) >= 3 and not expert
+                   and any(t in name for t in ("layers", "blocks", "stack")))
+        return param_spec(shape, mesh, stacked=stacked, expert=expert)
+    return jax.tree_util.tree_map_with_path(spec_for, tree)
+
+
+def tree_shardings(tree: Any, mesh: Any,
+                   specs: Optional[Any] = None) -> Any:
+    """Pytree of NamedShardings for ``tree`` on ``mesh`` — ``specs``
+    overrides the per-leaf PartitionSpecs (defaults to
+    :func:`params_shardings`)."""
+    if specs is None:
+        specs = params_shardings(tree, mesh)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))

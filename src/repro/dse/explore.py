@@ -29,6 +29,7 @@ import json
 import os
 import tempfile
 import time
+import warnings
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence
 
@@ -149,6 +150,12 @@ def _fingerprint(options: MapperOptions, seeds: Sequence[int],
             "suite": list(SUITE_KERNELS)}
 
 
+# paths already warned about this process (one warning per path per
+# failure mode, not one per variant — a sweep stores after every variant)
+_warned_store_paths: set = set()
+_warned_corrupt_paths: set = set()
+
+
 def _load_checkpoint(path: Optional[str], fp: Dict
                      ) -> Dict[str, VariantResult]:
     if not path or not os.path.exists(path):
@@ -160,19 +167,33 @@ def _load_checkpoint(path: Optional[str], fp: Dict
             return {}  # different sweep configuration: start fresh
         return {name: VariantResult.from_json_dict(v)
                 for name, v in d["variants"].items()}
-    except (OSError, ValueError, KeyError, TypeError):
-        return {}      # corrupt checkpoint: recompute (cache soaks the cost)
+    except (OSError, ValueError, KeyError, TypeError) as e:
+        # corrupt checkpoint: recompute (cache soaks the cost) — but say
+        # so, or an operator never learns their resume point was lost
+        if path not in _warned_corrupt_paths:
+            _warned_corrupt_paths.add(path)
+            warnings.warn(
+                f"DSE checkpoint {path!r} is unreadable "
+                f"({type(e).__name__}: {e}); ignoring it and recomputing "
+                f"(warm cache soaks the cost)", RuntimeWarning,
+                stacklevel=3)
+        return {}
 
 
 def _store_checkpoint(path: Optional[str], fp: Dict,
-                      done: Dict[str, VariantResult]) -> None:
+                      done: Dict[str, VariantResult],
+                      events: Optional[List[Dict]] = None) -> None:
     if not path:
         return
-    blob = json.dumps(
-        {"fingerprint": fp,
-         "variants": {name: v.to_json_dict()
-                      for name, v in sorted(done.items())}},
-        sort_keys=True, indent=1)
+    blob_dict = {"fingerprint": fp,
+                 "variants": {name: v.to_json_dict()
+                              for name, v in sorted(done.items())}}
+    if events:
+        # fleet recovery ledger (timeouts, retries, evictions) — recorded
+        # so an operator can audit a disturbed sweep; loaders ignore it,
+        # and it never enters the byte-deterministic report artifacts
+        blob_dict["events"] = events
+    blob = json.dumps(blob_dict, sort_keys=True, indent=1)
     out_dir = os.path.dirname(os.path.abspath(path))
     try:
         os.makedirs(out_dir, exist_ok=True)
@@ -180,14 +201,23 @@ def _store_checkpoint(path: Optional[str], fp: Dict,
         with os.fdopen(fd, "w", encoding="utf-8") as f:
             f.write(blob)
         os.replace(tmp, path)  # atomic: a killed sweep never corrupts it
-    except OSError:
-        pass                   # checkpointing is an optimization only
+    except OSError as e:
+        # checkpointing is an optimization only — the sweep continues —
+        # but a silently dead checkpoint costs hours on the next
+        # interruption, so warn once per path
+        if path not in _warned_store_paths:
+            _warned_store_paths.add(path)
+            warnings.warn(
+                f"DSE checkpoint write to {path!r} failed "
+                f"({type(e).__name__}: {e}); sweep progress is NOT being "
+                f"saved and an interrupted sweep will restart from the "
+                f"compile cache only", RuntimeWarning, stacklevel=3)
 
 
 # ------------------------------------------------------------------ sweep
 def _score_variant(point: ArchPoint, arch: CGRAArch, tc: Toolchain,
                    seeds: Sequence[int], jobs: Optional[int],
-                   verify: bool) -> VariantResult:
+                   verify: bool, fleet=None) -> VariantResult:
     # clusters is descriptive metadata here, NOT a cost divisor: the
     # mapper schedules each kernel across the variant's whole fabric
     # (one configured instance), so modeling extra data-parallel copies
@@ -210,7 +240,7 @@ def _score_variant(point: ArchPoint, arch: CGRAArch, tc: Toolchain,
 
     names = list(SUITE_KERNELS)
     cks = tc.compile_many([suite[k] for k in names], jobs=jobs,
-                          allow_unmapped=True)
+                          allow_unmapped=True, fleet=fleet)
     for kname, ck in zip(names, cks):
         if ck is None:
             reason = (tc.cached_map_error(suite[kname])
@@ -247,6 +277,9 @@ def run_sweep(points: Sequence[ArchPoint], *,
               checkpoint: Optional[str] = None,
               jobs: Optional[int] = None,
               verify: bool = True,
+              workers: Optional[int] = None,
+              faults=None,
+              fleet=None,
               log: Optional[Callable[[str], None]] = None
               ) -> List[VariantResult]:
     """Sweep the kernel library across ``points``; returns one
@@ -257,6 +290,20 @@ def run_sweep(points: Sequence[ArchPoint], *,
     come from the analytic cost model, and re-runs hit the toolchain's
     content-addressed cache — so two runs of the same sweep produce
     byte-identical reports, the second one warm.
+
+    ``workers=N`` shards each variant's compile units across N
+    supervised worker groups (:mod:`repro.dist.fleet`): per-task
+    deadlines, deterministic retry, killed-worker pool rebuilds,
+    heartbeat eviction with work stealing.  ``faults`` injects a
+    :class:`~repro.dist.faults.FaultPlan` into those workers; because
+    units are idempotent (content-addressed cache) and every finished
+    variant checkpoints, a sweep with injected worker loss emits
+    byte-identical artifacts to an undisturbed run — that is the
+    robustness contract, pinned by tests and the dist-smoke CI job.
+    ``fleet`` passes a full :class:`~repro.dist.fleet.FleetConfig`
+    instead (overrides ``workers``/``faults``).  Fleet recovery events
+    are logged and recorded in the checkpoint's ``events`` section —
+    timed-out and retried units are visible, never silently dropped.
 
     ``options`` configures the sweep's own Toolchain; when a ``toolchain``
     is passed its options govern (they feed every compile and the
@@ -276,11 +323,16 @@ def run_sweep(points: Sequence[ArchPoint], *,
     tc = toolchain or Toolchain(options=options)
     say = log or (lambda s: None)
 
+    if fleet is None and (workers is not None or faults is not None):
+        from ..dist.fleet import FleetConfig
+        fleet = FleetConfig(groups=workers or 2, faults=faults)
+
     fp = _fingerprint(tc.options, seeds, verify)
     done = _load_checkpoint(checkpoint, fp)
     if done:
         say(f"# checkpoint: {len(done)} variant(s) already swept")
 
+    events: List[Dict] = []
     results: List[VariantResult] = []
     for i, point in enumerate(points):
         if point.name in done:
@@ -297,13 +349,26 @@ def run_sweep(points: Sequence[ArchPoint], *,
                           for k in SUITE_KERNELS}
             done[point.name] = vr
             results.append(vr)
-            _store_checkpoint(checkpoint, fp, done)
+            _store_checkpoint(checkpoint, fp, done, events)
             say(f"[{i + 1}/{len(points)}] {point.name}: invalid ({e})")
             continue
-        vr = _score_variant(point, arch, tc, seeds, jobs, verify)
+        vr = _score_variant(point, arch, tc, seeds, jobs, verify,
+                            fleet=fleet)
         done[point.name] = vr
         results.append(vr)
-        _store_checkpoint(checkpoint, fp, done)
+        report = tc.last_fleet_report
+        if report is not None and not report.quiet():
+            # a disturbed fan-out: keep the recovery ledger with the
+            # checkpoint (timed-out units are recorded, not dropped)
+            events.append({"variant": point.name,
+                           **report.events_json_dict()})
+            say(f"# fleet[{point.name}]: "
+                f"{len(report.timeouts)} timeout(s), "
+                f"{report.retries} retrie(s), "
+                f"{report.pool_rebuilds} pool rebuild(s), "
+                f"evicted={report.evicted_groups}, "
+                f"stolen={report.stolen_units}")
+        _store_checkpoint(checkpoint, fp, done, events)
         say(f"[{i + 1}/{len(points)}] {point.name}: "
             f"{vr.mapped}/{len(SUITE_KERNELS)} kernels ok, "
             f"area={vr.area}, latency={vr.total_ms:.3f}ms "

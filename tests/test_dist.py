@@ -1,0 +1,260 @@
+"""Fleet robustness tests: supervised work-queue runner (deadlines,
+bounded retry, killed-worker recovery, heartbeat eviction with work
+stealing), process-pool poisoning recovery, deterministic fault
+injection, checkpoint failure warnings — and the headline contract:
+a DSE sweep with injected worker loss emits byte-identical artifacts
+to an undisturbed single-process run."""
+import json
+import os
+import warnings
+
+import pytest
+
+from repro.core import pool
+from repro.dist import faults
+from repro.dist.fleet import (DEFAULT_RETRIES, DEFAULT_TIMEOUT_S,
+                              FleetConfig, FleetError, backoff_schedule,
+                              run_fleet)
+
+needs_pool = pytest.mark.skipif(
+    pool.shared_pool() is None,
+    reason="process fan-out unavailable in this context")
+
+
+# ------------------------------------------------------------ pure units
+def test_backoff_schedule_is_deterministic_and_capped():
+    assert backoff_schedule(4) == (0.05, 0.1, 0.2, 0.4)
+    assert backoff_schedule(4) == backoff_schedule(4)
+    assert backoff_schedule(0) == ()
+    sched = backoff_schedule(8, base_s=0.2, cap_s=1.0)
+    assert sched[:3] == (0.2, 0.4, 0.8)
+    assert set(sched[3:]) == {1.0}              # capped, never unbounded
+
+
+def test_fleet_config_env_resolution(monkeypatch):
+    monkeypatch.delenv("MORPHER_TASK_TIMEOUT_S", raising=False)
+    monkeypatch.delenv("MORPHER_FLEET_RETRIES", raising=False)
+    cfg = FleetConfig()
+    assert cfg.resolved_timeout_s() == DEFAULT_TIMEOUT_S
+    assert cfg.resolved_retries() == DEFAULT_RETRIES
+    assert cfg.resolved_heartbeat_s(10.0) == 20.0
+    monkeypatch.setenv("MORPHER_TASK_TIMEOUT_S", "7.5")
+    monkeypatch.setenv("MORPHER_FLEET_RETRIES", "5")
+    assert cfg.resolved_timeout_s() == 7.5
+    assert cfg.resolved_retries() == 5
+    # explicit values beat the environment
+    explicit = FleetConfig(timeout_s=1.0, retries=0,
+                           heartbeat_timeout_s=3.0)
+    assert explicit.resolved_timeout_s() == 1.0
+    assert explicit.resolved_retries() == 0
+    assert explicit.resolved_heartbeat_s(1.0) == 3.0
+
+
+def test_fault_plan_seeded_roundtrip_and_fire_once(tmp_path):
+    p1 = faults.FaultPlan.seeded(seed=3, units=10, kills=2, delays=1,
+                                 mutes=1, groups=4)
+    p2 = faults.FaultPlan.seeded(seed=3, units=10, kills=2, delays=1,
+                                 mutes=1, groups=4)
+    assert (p1.kill_units, p1.delay_units, p1.mute_groups) == \
+        (p2.kill_units, p2.delay_units, p2.mute_groups)
+    assert len(p1.kill_units) == 2 and len(p1.delay_units) == 1
+    assert p1.state_dir                       # seeded() arms the plan
+    rt = faults.FaultPlan.from_json(p1.to_json())
+    assert rt == p1
+
+    plan = faults.FaultPlan(kill_units=(1,),
+                            state_dir=str(tmp_path)).armed()
+    assert plan.state_dir == str(tmp_path)    # armed() is idempotent
+    assert plan._fire_once("kill-1") is True
+    assert plan._fire_once("kill-1") is False  # exactly once per tag
+    assert faults.FaultPlan(kill_units=(1,))._fire_once("kill-1") is False
+    assert plan.muted(0) is False
+
+
+def test_corrupt_file_is_deterministic(tmp_path):
+    a, b = tmp_path / "a", tmp_path / "b"
+    payload = json.dumps({"k": list(range(40))}).encode()
+    a.write_bytes(payload)
+    b.write_bytes(payload)
+    faults.corrupt_file(str(a), seed=7)
+    faults.corrupt_file(str(b), seed=7)
+    assert a.read_bytes() == b.read_bytes() != payload
+
+
+def test_fleet_inline_fallback_in_worker(monkeypatch):
+    # inside a pool worker the pool is unavailable: run_fleet degrades
+    # to sequential inline execution (and never consults the fault plan)
+    monkeypatch.setenv(pool.WORKER_ENV, "1")
+    plan = faults.FaultPlan(kill_units=(0, 1, 2)).armed()
+    rep = run_fleet(faults.double, [1, 2, 3],
+                    FleetConfig(groups=2, faults=plan))
+    assert rep.results == [2, 4, 6]
+    assert rep.sequential and not rep.quiet()
+    rep2 = run_fleet(faults.double, [1, 2, 3],
+                     FleetConfig(groups=2), inline_fallback=False)
+    assert rep2.results is None and rep2.sequential
+
+
+def test_fleet_empty_payloads():
+    rep = run_fleet(faults.double, [])
+    assert rep.results == [] and rep.quiet()
+
+
+# ------------------------------------------------------- supervised runs
+@needs_pool
+def test_fleet_parallel_matches_sequential():
+    rep = run_fleet(faults.double, list(range(8)),
+                    FleetConfig(groups=2, timeout_s=60))
+    assert rep.results == [p * 2 for p in range(8)]
+    assert not rep.sequential
+    assert rep.quiet()
+
+
+@needs_pool
+def test_fleet_recovers_from_killed_worker():
+    plan = faults.FaultPlan(kill_units=(1,)).armed()
+    rep = run_fleet(faults.double, list(range(8)),
+                    FleetConfig(groups=2, timeout_s=60, faults=plan))
+    assert rep.results == [p * 2 for p in range(8)]
+    assert rep.pool_rebuilds >= 1             # the kill was observed
+    assert not rep.quiet()
+    # the shared pool is not poisoned for the next caller
+    assert pool.process_map(faults.double, [1, 2, 3]) in ([2, 4, 6], None)
+
+
+@needs_pool
+def test_fleet_straggler_times_out_and_result_survives():
+    plan = faults.FaultPlan(delay_units=((2, 1.5),)).armed()
+    rep = run_fleet(faults.double, list(range(8)),
+                    FleetConfig(groups=2, timeout_s=0.4, retries=2,
+                                faults=plan))
+    assert rep.results == [p * 2 for p in range(8)]
+    # the expired deadline is recorded, not silently dropped ...
+    assert {"unit": 2, "attempt": 0} in rep.timeouts
+    # ... and the re-queue charged the unit's retry budget
+    assert rep.retries >= 1
+
+
+@needs_pool
+def test_fleet_exhausted_retry_budget_raises():
+    plan = faults.FaultPlan(delay_units=((0, 1.0), (1, 1.0), (2, 1.0),
+                                         (3, 1.0))).armed()
+    with pytest.raises(FleetError):
+        # every delay fires once, but retries=0 leaves no budget
+        run_fleet(faults.double, list(range(4)),
+                  FleetConfig(groups=2, timeout_s=0.3, retries=0,
+                              faults=plan))
+    pool.reset_pool(kill=True)    # drop any sleeping orphans
+
+
+@needs_pool
+def test_fleet_evicts_silent_group_and_steals_exactly_once():
+    # group 1 (units 1,3,5) goes silent: unit 1 sleeps while the muted
+    # group's completions never beat the monitor -> after 0.4s the group
+    # is evicted and its *queued* units (3,5) are stolen by group 0
+    plan = faults.FaultPlan(delay_units=((1, 1.2),),
+                            mute_groups=(1,)).armed()
+    rep = run_fleet(faults.double, list(range(6)),
+                    FleetConfig(groups=2, timeout_s=30,
+                                heartbeat_timeout_s=0.4, max_inflight=2,
+                                faults=plan))
+    assert rep.results == [p * 2 for p in range(6)]
+    assert rep.evicted_groups == [1]
+    assert rep.stolen_units == [3, 5]         # each stolen exactly once
+    assert sorted(set(rep.stolen_units)) == rep.stolen_units
+
+
+@needs_pool
+def test_process_map_survives_killed_worker():
+    # a worker dying mid-batch poisons naive executors; process_map rebuilds
+    # and the *next* call gets a healthy pool (regression: a single
+    # BrokenProcessPool used to fail every later fan-out)
+    out = pool.process_map(faults.kill_worker, [1, 2, 3])
+    assert out is None                         # batch unrecoverable: kill
+    assert pool.process_map(faults.double, [1, 2, 3]) == [2, 4, 6]
+
+
+# -------------------------------------------------- checkpoint failures
+def test_store_checkpoint_warns_once_per_path(tmp_path):
+    from repro.dse import explore
+    blocker = tmp_path / "blocker"
+    blocker.write_text("a file, not a directory")
+    bad = str(blocker / "sub" / "ckpt.json")   # mkdir under a file: OSError
+    with pytest.warns(RuntimeWarning, match="NOT being saved"):
+        explore._store_checkpoint(bad, {"v": 1}, {})
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        explore._store_checkpoint(bad, {"v": 1}, {})   # silent 2nd time
+
+
+def test_corrupt_checkpoint_warns_and_recomputes(tmp_path):
+    from repro.dse import explore
+    fp = {"schema": 1}
+    path = tmp_path / "ckpt.json"
+    path.write_text(json.dumps({"fingerprint": fp, "variants": {}}))
+    assert explore._load_checkpoint(str(path), fp) == {}
+    faults.corrupt_file(str(path), seed=0, n_bytes=16)
+    with pytest.warns(RuntimeWarning, match="unreadable"):
+        assert explore._load_checkpoint(str(path), fp) == {}
+    with warnings.catch_warnings():            # once per path only
+        warnings.simplefilter("error")
+        assert explore._load_checkpoint(str(path), fp) == {}
+
+
+# ------------------------------------------- headline contract (e2e)
+@pytest.fixture(scope="module")
+def faulted_sweep(tmp_path_factory):
+    """One 2-variant compile-only sweep, run twice from cold caches:
+    undisturbed sequential vs. fleet with a killed worker + straggler."""
+    from repro.core import MapperOptions, Toolchain
+    from repro.dse import get_space, run_sweep
+    root = tmp_path_factory.mktemp("dist_e2e")
+    points = get_space("tiny")[:2]
+
+    tc_seq = Toolchain(options=MapperOptions(ii_max=20),
+                       cache_dir=str(root / "cache_seq"))
+    seq = run_sweep(points, toolchain=tc_seq, verify=False,
+                    checkpoint=str(root / "ckpt_seq.json"))
+
+    # kill the worker on unit 1, delay unit 2 past its 20s deadline —
+    # fire-once each, so the retried attempts run clean
+    plan = faults.FaultPlan(kill_units=(1,),
+                            delay_units=((2, 45.0),)).armed()
+    cfg = FleetConfig(groups=2, timeout_s=20.0, faults=plan)
+    tc_fleet = Toolchain(options=MapperOptions(ii_max=20),
+                         cache_dir=str(root / "cache_fleet"))
+    ckpt = root / "ckpt_fleet.json"
+    disturbed = run_sweep(points, toolchain=tc_fleet, verify=False,
+                          checkpoint=str(ckpt), fleet=cfg)
+    return root, points, seq, disturbed, ckpt
+
+
+def test_faulted_sweep_results_match(faulted_sweep):
+    _root, points, seq, disturbed, _ckpt = faulted_sweep
+    assert [r.to_json_dict() for r in disturbed] == \
+        [r.to_json_dict() for r in seq]
+
+
+def test_faulted_sweep_artifacts_byte_identical(faulted_sweep):
+    from repro.dse import write_artifacts
+    root, _points, seq, disturbed, _ckpt = faulted_sweep
+    a = write_artifacts(seq, str(root / "out_seq"), space="dist-e2e",
+                        seeds=[0], verified=False)
+    b = write_artifacts(disturbed, str(root / "out_fleet"),
+                        space="dist-e2e", seeds=[0], verified=False)
+    for name in a:
+        ab = open(a[name], "rb").read()
+        bb = open(b[name], "rb").read()
+        assert ab == bb, f"{name} differs between faulted and clean runs"
+
+
+def test_faulted_sweep_checkpoint_records_recovery(faulted_sweep):
+    _root, _points, _seq, _disturbed, ckpt = faulted_sweep
+    if pool.shared_pool() is None:            # sequential context: no
+        pytest.skip("no process fan-out")      # fleet events to record
+    d = json.loads(ckpt.read_text())
+    events = d.get("events", [])
+    assert events, "disturbed sweep must keep its recovery ledger"
+    assert any(e["pool_rebuilds"] >= 1 for e in events)    # the kill
+    timeouts = [t for e in events for t in e["timeouts"]]
+    assert timeouts, "expired deadline must be recorded, not dropped"

@@ -8,13 +8,6 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-pytest.importorskip(
-    "hypothesis", reason="hypothesis not installed (pip install -e '.[test]')")
-pytest.importorskip(
-    "repro.dist.elastic",
-    reason="repro.dist subsystem not in tree yet (see ROADMAP open items)")
-from hypothesis import given, settings, strategies as st
-
 from repro.configs.registry import get_config
 from repro.checkpoint.checkpointer import Checkpointer
 from repro.data.pipeline import DataConfig, Prefetcher, TokenSource
