@@ -20,8 +20,11 @@ command line.
 Run:  PYTHONPATH=src python examples/edge_deploy.py --arch llama3.2-1b
       add --all to sweep the whole model zoo off one warm cache
       add --arch-file examples/cluster_4x4.adl.json for a custom target
+      add --emit-streams DIR to export every distinct compiled tile as
+      a per-PE instruction-stream artifact family (repro.isa)
 """
 import argparse
+import os
 import sys
 import time
 
@@ -29,7 +32,9 @@ sys.path.insert(0, "src")
 
 from repro.configs.registry import ARCH_IDS, get_config
 from repro.core import CGRAArch, MapperOptions, Toolchain
-from repro.core.offload import analyze_arch_gemms, model_gemm_sites
+from repro.core.mapper import MapError
+from repro.core.offload import (analyze_gemm_tile, analyze_arch_gemms,
+                                choose_gemm_tile, model_gemm_sites)
 
 
 def load_arch_file(path: str) -> CGRAArch:
@@ -65,6 +70,34 @@ def report_arch(arch_id: str, tokens: int, toolchain: Toolchain) -> None:
           f"the first)")
 
 
+def emit_streams(arch_id: str, tokens: int, out_dir: str,
+                 toolchain: Toolchain) -> None:
+    """Export every distinct compiled tile of the model's GEMM sites as a
+    deployable instruction-stream family (``repro.isa``) — the artifacts
+    a CGRA control memory actually consumes.  Tiles shared across sites
+    (the common case) export once; compiles are warm-cache hits after the
+    analysis pass."""
+    cfg = get_config(arch_id)
+    arch = toolchain.arch or None
+    from repro.core.adl import cluster_4x4
+    arch = arch or cluster_4x4()
+    done = set()
+    for s in model_gemm_sites(cfg, tokens):
+        tile = choose_gemm_tile(arch, s)
+        if tile in done:
+            continue
+        done.add(tile)
+        try:
+            ck = analyze_gemm_tile(*tile, arch=arch, toolchain=toolchain)
+        except MapError:
+            continue
+        dest = os.path.join(out_dir, arch_id,
+                            "gemm_" + "x".join(str(t) for t in tile))
+        paths = toolchain.export_streams(ck, dest)
+        print(f"  emitted {ck.name} (II={ck.II}) -> {dest} "
+              f"({len(paths)} files)")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3.2-1b", choices=ARCH_IDS)
@@ -74,6 +107,11 @@ def main():
     ap.add_argument("--arch-file", default=None, metavar="ADL_JSON",
                     help="user-defined CGRA architecture (ADL JSON, "
                          "as written by CGRAArch.to_json)")
+    ap.add_argument("--emit-streams", default=None, metavar="DIR",
+                    help="export each distinct compiled tile as per-PE "
+                         "instruction streams (instructions.csv / "
+                         "kernel.asm / stream_manifest.json) under "
+                         "DIR/<model>/<tile>/")
     args = ap.parse_args()
 
     cgra = load_arch_file(args.arch_file) if args.arch_file else None
@@ -86,6 +124,9 @@ def main():
     toolchain = Toolchain(arch=cgra, options=MapperOptions())
     for arch_id in (ARCH_IDS if args.all else [args.arch]):
         report_arch(arch_id, args.tokens, toolchain)
+        if args.emit_streams:
+            print(f"\ninstruction streams ({args.emit_streams}):")
+            emit_streams(arch_id, args.tokens, args.emit_streams, toolchain)
         if args.all:
             print()
 

@@ -38,6 +38,42 @@ OPC = {None: 0, "pass": 1, Op.ADD: 2, Op.SUB: 3, Op.MUL: 4, Op.SHL: 5,
 OPC_NONE, OPC_PASS = 0, 1
 OPC_LOAD, OPC_STORE = OPC[Op.LOAD], OPC[Op.STORE]
 
+# bidirectional opcode <-> mnemonic map shared by the simulator, the
+# instruction-stream exporter (repro.isa.encode) and the standalone
+# interpreter (repro.isa.interp), so the three can never drift: the
+# exporter writes MNEMONIC[code] into instructions.csv and the
+# interpreter dispatches on those names
+MNEMONIC = {code: ("nop" if key is None
+                   else key if isinstance(key, str) else key.value)
+            for key, code in OPC.items()}
+OPC_BY_MNEMONIC = {m: c for c, m in MNEMONIC.items()}
+
+
+def opcode_of(op: Optional[Op]) -> int:
+    """FU opcode for a DFG node op.  CONST and LIVEIN lower to PASS (the
+    value enters through the imm / live-in-register operand mux, not the
+    ALU); every other op must have an explicit encoding — raising here is
+    what keeps a newly added ``Op`` member from dying as a bare KeyError
+    deep inside config generation."""
+    if op in (Op.CONST, Op.LIVEIN):
+        return OPC_PASS
+    try:
+        return OPC[op]
+    except KeyError:
+        raise NotImplementedError(
+            f"op {op!r} has no simulator opcode encoding — add it to "
+            f"config_gen.OPC") from None
+
+
+# operand/writeback mux-kind <-> mnemonic map (same drift-proofing as
+# MNEMONIC).  KIND_REG and KIND_LIREG selects carry an index; the CSV
+# spelling is mnemonic+index ("reg3", "li0"), the rest are bare.
+KIND_MNEMONIC = {KIND_NONE: "none", KIND_IN_N: "in_n", KIND_IN_E: "in_e",
+                 KIND_IN_S: "in_s", KIND_IN_W: "in_w", KIND_REG: "reg",
+                 KIND_FUOUT: "fu", KIND_IMM: "imm", KIND_LIREG: "li"}
+KIND_BY_MNEMONIC = {m: k for k, m in KIND_MNEMONIC.items()}
+INDEXED_KINDS = (KIND_REG, KIND_LIREG)
+
 
 @dataclass
 class SimConfig:
@@ -77,10 +113,13 @@ class SimConfig:
 
     def to_json(self) -> str:
         # underscore attributes are transient caches (e.g. the simulator's
-        # device-resident plane copies), not part of the artifact
+        # device-resident plane copies), not part of the artifact.
+        # Canonical form (sorted keys, compact separators): the same
+        # byte-determinism contract as ServePlan.to_json, so artifacts
+        # embedding a SimConfig are byte-stable across runs and machines.
         d = {k: (v.tolist() if isinstance(v, np.ndarray) else v)
              for k, v in self.__dict__.items() if not k.startswith("_")}
-        return json.dumps(d)
+        return json.dumps(d, sort_keys=True, separators=(",", ":"))
 
     _ARRAY_DTYPES = {
         "op": np.int32, "imm": np.int32, "src_kind": np.int32,
@@ -242,7 +281,7 @@ def generate_config(mapping: Mapping, layout: DataLayout) -> SimConfig:
             src_kind[slot, pe, 0] = KIND_LIREG
             src_idx[slot, pe, 0] = mapping.lireg_assign[n.livein][1]
         else:
-            op[slot, pe] = OPC[n.op]
+            op[slot, pe] = opcode_of(n.op)
         if n.is_mem:
             b = mapping.bank_of[vid]
             mem_off[slot, pe] = bank_offsets[b]

@@ -53,7 +53,10 @@ from .mapper import MapError, Mapping, MapperOptions, map_kernel_opts
 # v2: SimConfig.bank_offsets became an id-keyed mapping (banks are
 # identified by MemBank.id, not list position) — v1 artifacts are
 # incompatible and recompile on load
-ARTIFACT_VERSION = 2
+# v3: SimConfig.to_json is canonical (sorted keys, compact separators) —
+# the instruction-stream exporter's byte-determinism contract rests on
+# it; v2 artifacts parse fine but recompile so cached bytes are canonical
+ARTIFACT_VERSION = 3
 CACHE_ENV = "MORPHER_CACHE_DIR"
 
 
@@ -218,6 +221,13 @@ class CompiledKernel:
                     f"{self.name} (II={self.II}): simulation mismatch in "
                     f"{bank} at words {bad.tolist()}: got {got[bad]}, "
                     f"want {exp[bad]}")
+        from .verify import xval_enabled
+        if xval_enabled():
+            # opt-in second oracle (MORPHER_XVAL=1): the exported
+            # instruction stream through the standalone interpreter must
+            # also match the simulator bit-for-bit
+            from ..isa.xval import cross_validate
+            cross_validate(self, seeds=(seed,))
         return self
 
     def verify_batch(self, seeds: Sequence[int] = (0,),
@@ -270,6 +280,10 @@ class CompiledKernel:
                         f"{self.name} (II={self.II}, seed={seed}): batched "
                         f"simulation mismatch in {bank} at words "
                         f"{bad.tolist()}: got {got[bad]}, want {exp[bad]}")
+        from .verify import xval_enabled
+        if xval_enabled():
+            from ..isa.xval import cross_validate
+            cross_validate(self, seeds=seeds)
         return self
 
     # --------------------------------------------------------- serialization
@@ -660,6 +674,41 @@ class Toolchain:
                 continue
             finish(key, idxs, mapping, generate_config(mapping, spec.layout))
         return results
+
+    # --------------------------------------------- instruction-stream export
+    def export_streams(self, kernel, out_dir: str,
+                       options: Optional[MapperOptions] = None
+                       ) -> Dict[str, str]:
+        """Lower a kernel to the per-PE instruction-stream artifact family
+        (``repro.isa``): ``instructions.csv`` + ``kernel.asm`` +
+        ``stream_manifest.json`` written under ``out_dir``.
+
+        ``kernel`` may be a :class:`CompiledKernel`, a spec, or an
+        arch-deferred frontend program (compiled here first; compiles are
+        cache hits after the first).  The artifacts are byte-deterministic
+        — two cold exports of the same kernel are ``cmp``-identical —
+        which is what makes them a deployment format rather than a debug
+        dump.  Returns filename -> written path.
+        """
+        ck = (kernel if isinstance(kernel, CompiledKernel)
+              else self.compile(kernel, options))
+        from ..isa.encode import export_streams
+        return export_streams(ck, out_dir)
+
+    def cross_validate(self, kernel, seeds: Sequence[int] = (0,),
+                       options: Optional[MapperOptions] = None
+                       ) -> CompiledKernel:
+        """Run the exporter -> standalone-interpreter loop and assert the
+        final memory image is bit-identical to ``simulate()`` for every
+        seed — the flow's independent second oracle (the interpreter
+        shares no code with the JAX simulator).  Raises AssertionError on
+        the first diverging (seed, bank, word); returns the compiled
+        kernel."""
+        ck = (kernel if isinstance(kernel, CompiledKernel)
+              else self.compile(kernel, options))
+        from ..isa.xval import cross_validate
+        cross_validate(ck, seeds=seeds)
+        return ck
 
     def verify_many(self, kernels: Iterable, seeds: Sequence[int] = (0,),
                     check_dfg: bool = True,

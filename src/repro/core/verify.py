@@ -21,6 +21,7 @@ the DFG-semantics cross-check it uses, plus the deprecated
 """
 from __future__ import annotations
 
+import os
 import warnings
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence
@@ -30,6 +31,14 @@ import numpy as np
 from .config_gen import SimConfig, generate_config
 from .kernels_lib import KernelSpec
 from .mapper import Mapping
+
+
+def xval_enabled() -> bool:
+    """Opt-in second oracle: ``MORPHER_XVAL=1`` routes every verify through
+    the exported instruction stream + standalone interpreter
+    (``repro.isa.xval``) in addition to the simulator comparison, so a
+    verify pass additionally certifies the deployment artifact."""
+    return os.environ.get("MORPHER_XVAL", "") == "1"
 
 
 @dataclass

@@ -1,0 +1,230 @@
+"""Instruction-stream backend (repro.isa): mnemonic-table exhaustiveness,
+byte-deterministic export, the pinned GEMM golden stream, stream-parser
+error reporting, interpreter ≡ simulate() bit-identity over the whole
+ten-kernel library × seeds, the MORPHER_XVAL verify hook, and the
+canonical SimConfig.to_json / warm-cache round-trip contract."""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.config_gen import (KIND_BY_MNEMONIC, KIND_MNEMONIC, MNEMONIC,
+                                   OPC, OPC_BY_MNEMONIC, OPC_PASS, SimConfig,
+                                   opcode_of)
+from repro.core.dfg import Op
+from repro.core.kernels_lib import build_gemm, table1_kernels
+from repro.core.toolchain import ARTIFACT_VERSION, Toolchain
+from repro.core.verify import xval_enabled
+from repro.frontend.library import dsl_kernels
+from repro.isa import (ASM_NAME, CSV_NAME, MANIFEST_NAME, STREAM_FORMAT,
+                       StreamError, cross_validate, cross_validate_dir,
+                       encode_kernel, export_streams, interpret, load_stream,
+                       parse_stream, stream_for)
+
+GOLDEN_CSV = os.path.join(os.path.dirname(__file__),
+                          "golden_gemm_small_instructions.csv")
+
+
+@pytest.fixture(scope="module")
+def compiled_all():
+    tc = Toolchain(cache_dir="")
+    specs = {**table1_kernels(small=True), **dsl_kernels()}
+    return dict(zip(specs, tc.compile_many(list(specs.values()))))
+
+
+@pytest.fixture(scope="module")
+def gemm_ck(compiled_all):
+    return compiled_all["GEMM"]
+
+
+# ------------------------------------------------------- mnemonic tables
+def test_every_op_has_an_opcode_encoding():
+    """Exhaustiveness: no Op enum member may silently lack an encoding —
+    adding an op to the DFG layer without teaching the simulator/exporter
+    must fail loudly, not produce a stream with holes."""
+    for op in Op:
+        code = opcode_of(op)
+        assert isinstance(code, int)
+        assert MNEMONIC[code] != "nop"
+    # CONST / LIVEIN lower to the pass opcode (operand routing does the work)
+    assert opcode_of(Op.CONST) == OPC_PASS
+    assert opcode_of(Op.LIVEIN) == OPC_PASS
+
+
+def test_mnemonic_tables_are_bijective():
+    assert len(MNEMONIC) == len(OPC)
+    for code, m in MNEMONIC.items():
+        assert OPC_BY_MNEMONIC[m] == code
+    assert len(KIND_BY_MNEMONIC) == len(KIND_MNEMONIC)
+    for kind, m in KIND_MNEMONIC.items():
+        assert KIND_BY_MNEMONIC[m] == kind
+    # mnemonics must survive the CSV select grammar: lowercase, no commas
+    for m in list(MNEMONIC.values()) + list(KIND_MNEMONIC.values()):
+        assert m == m.lower() and "," not in m and m
+
+
+# ------------------------------------------------- byte-determinism + golden
+def test_export_is_byte_deterministic(gemm_ck, tmp_path):
+    a = encode_kernel(gemm_ck)
+    b = encode_kernel(gemm_ck)
+    assert a == b
+    d1, d2 = tmp_path / "one", tmp_path / "two"
+    p1 = export_streams(gemm_ck, str(d1))
+    p2 = export_streams(gemm_ck, str(d2))
+    assert sorted(p1) == sorted(p2) == sorted(
+        (CSV_NAME, ASM_NAME, MANIFEST_NAME))
+    for fn in p1:
+        with open(p1[fn], "rb") as f1, open(p2[fn], "rb") as f2:
+            assert f1.read() == f2.read(), fn
+
+
+def test_csv_shape_contract(gemm_ck):
+    """Sorted columns, trailing newline, one record per (slot, pe) in
+    (slot, pe) order — the byte-determinism contract's moving parts."""
+    csv_text = encode_kernel(gemm_ck)[CSV_NAME]
+    assert csv_text.endswith("\n") and not csv_text.endswith("\n\n")
+    lines = csv_text.split("\n")[:-1]
+    header = lines[0].split(",")
+    assert header == sorted(header)
+    cfg = gemm_ck.cfg
+    assert len(lines) - 1 == cfg.II * cfg.P
+    col = {c: i for i, c in enumerate(header)}
+    keys = [(int(ln.split(",")[col["slot"]]), int(ln.split(",")[col["pe"]]))
+            for ln in lines[1:]]
+    assert keys == sorted(keys)
+
+
+def test_manifest_is_self_describing(gemm_ck):
+    man = json.loads(encode_kernel(gemm_ck)[MANIFEST_NAME])
+    assert man["artifact_version"] == ARTIFACT_VERSION
+    assert man["stream_format"] == STREAM_FORMAT
+    assert man["kernel"] == gemm_ck.name
+    cfg = gemm_ck.cfg
+    assert (man["II"], man["P"], man["RF"], man["LI"]) == (
+        cfg.II, cfg.P, cfg.RF, cfg.LI)
+    assert man["bits"] == cfg.bits and man["depth"] == cfg.depth
+    assert man["columns"] == encode_kernel(gemm_ck)[CSV_NAME].split("\n")[0] \
+        .split(",")
+    assert {int(k): v for k, v in man["bank_offsets"].items()} == \
+        dict(cfg.bank_offsets)
+    assert len(man["neighbors"]) == cfg.P
+    # canonical json: sorted keys, compact separators, trailing newline
+    text = encode_kernel(gemm_ck)[MANIFEST_NAME]
+    assert text == json.dumps(man, sort_keys=True,
+                              separators=(",", ":")) + "\n"
+
+
+def test_golden_gemm_small_stream_is_pinned(gemm_ck):
+    """The committed GEMM-small stream is the cross-machine determinism
+    witness: a mapper/encoder change that alters the artifact must show up
+    as a reviewed golden-file diff."""
+    with open(GOLDEN_CSV, encoding="utf-8") as f:
+        golden = f.read()
+    assert encode_kernel(gemm_ck)[CSV_NAME] == golden
+
+
+# ------------------------------------------------------------ stream parser
+def test_parse_rejects_malformed_streams(gemm_ck):
+    art = encode_kernel(gemm_ck)
+    man = json.loads(art[MANIFEST_NAME])
+    csv_text = art[CSV_NAME]
+    with pytest.raises(StreamError, match="stream_format"):
+        parse_stream(csv_text, {**man, "stream_format": STREAM_FORMAT + 1})
+    with pytest.raises(StreamError, match="header"):
+        parse_stream(csv_text, {**man, "columns": man["columns"][::-1]})
+    lines = csv_text.split("\n")
+    with pytest.raises(StreamError, match="records"):
+        parse_stream("\n".join(lines[:-2]) + "\n", man)
+    dup = "\n".join(lines[:-2] + [lines[1], ""])
+    with pytest.raises(StreamError, match="duplicate"):
+        parse_stream(dup, man)
+
+
+def test_tampered_stream_fails_cross_validation(gemm_ck):
+    """The oracle has teeth: push every store's validity window past the
+    end of time and the interpreter's final memory no longer matches."""
+    art = encode_kernel(gemm_ck)
+    man = json.loads(art[MANIFEST_NAME])
+    lines = art[CSV_NAME].split("\n")
+    col = {c: i for i, c in enumerate(lines[0].split(","))}
+    out = [lines[0]]
+    for ln in lines[1:-1]:
+        v = ln.split(",")
+        if v[col["opcode"]] == "store":
+            v[col["tstart"]] = "1000000"
+        out.append(",".join(v))
+    stream = parse_stream("\n".join(out) + "\n", man)
+    with pytest.raises(AssertionError, match="diverges"):
+        cross_validate(gemm_ck, seeds=(0,), stream=stream)
+
+
+# ----------------------------------------------- interpreter ≡ simulate()
+def test_all_library_kernels_bit_identical(compiled_all):
+    """The acceptance criterion: every library kernel (six Table-I small +
+    four DSL), two seeds each, interpreter final memory bit-identical to
+    the cycle-accurate simulator."""
+    for name, ck in compiled_all.items():
+        assert cross_validate(ck, seeds=(0, 1)) == 2, name
+
+
+def test_roundtrip_through_disk(gemm_ck, tmp_path):
+    export_streams(gemm_ck, str(tmp_path))
+    assert cross_validate_dir(gemm_ck, str(tmp_path), seeds=(0,)) == 1
+    # and the parsed-from-disk stream equals the in-memory one
+    a, b = load_stream(str(tmp_path)), stream_for(gemm_ck)
+    assert a == b
+
+
+def test_interpret_does_not_mutate_inputs(gemm_ck):
+    init = gemm_ck.random_banks(seed=7)
+    keep = {k: v.copy() for k, v in init.items()}
+    out = interpret(stream_for(gemm_ck), init, gemm_ck.invocations,
+                    gemm_ck.mapped_iters)
+    for k in init:
+        np.testing.assert_array_equal(init[k], keep[k])
+    assert sorted(out) == sorted(init)
+
+
+# --------------------------------------------------- verify hook + toolchain
+def test_morpher_xval_verify_hook(gemm_ck, monkeypatch):
+    monkeypatch.delenv("MORPHER_XVAL", raising=False)
+    assert not xval_enabled()
+    monkeypatch.setenv("MORPHER_XVAL", "0")
+    assert not xval_enabled()
+    monkeypatch.setenv("MORPHER_XVAL", "1")
+    assert xval_enabled()
+    gemm_ck.verify(seed=0)              # simulator + interpreter oracles
+    gemm_ck.verify_batch(seeds=(0, 1))
+
+
+def test_toolchain_level_wrappers(tmp_path):
+    tc = Toolchain(cache_dir=str(tmp_path / "cache"))
+    spec = build_gemm(TI=4, TK=4, TJ=4, unroll=1)
+    paths = tc.export_streams(spec, str(tmp_path / "streams"))
+    assert all(os.path.exists(p) for p in paths.values())
+    ck = tc.cross_validate(spec, seeds=(0, 1))
+    assert ck.name == spec.name
+
+
+# ------------------------------------------- canonical SimConfig.to_json
+def test_simconfig_to_json_is_canonical(gemm_ck):
+    text = gemm_ck.cfg.to_json()
+    d = json.loads(text)
+    assert text == json.dumps(d, sort_keys=True, separators=(",", ":"))
+    cfg2 = SimConfig.from_json(text)
+    assert cfg2.to_json() == text       # fixed point
+
+
+def test_warm_cache_reload_roundtrips(tmp_path):
+    """ARTIFACT_VERSION v3 contract: a warm-cache reload reproduces the
+    configuration byte-for-byte and still verifies/cross-validates."""
+    spec = build_gemm(TI=4, TK=4, TJ=4, unroll=1)
+    tc = Toolchain(cache_dir=str(tmp_path))
+    cold = tc.compile(spec)
+    assert not cold.from_cache
+    warm = Toolchain(cache_dir=str(tmp_path)).compile(spec)
+    assert warm.from_cache
+    assert warm.cfg.to_json() == cold.cfg.to_json()
+    assert encode_kernel(warm) == encode_kernel(cold)
+    cross_validate(warm, seeds=(0,))
