@@ -18,9 +18,19 @@ addressed mapping cache, and finished variants checkpoint to
 hits, and an interrupted sweep resumes where it stopped.  Two runs of
 the same sweep produce byte-identical reports.
 
+``--search nsga2|halving`` switches from exhaustive sweep to seeded
+multi-objective search (repro.dse.search): the space becomes the
+candidate universe (use ``--space wide``), evaluation batches whole
+populations per XLA launch, and the artifacts gain the search
+trajectory.  Search runs are byte-deterministic for a given
+``--search-seed`` — cold, warm and checkpoint-resumed runs emit
+identical ``dse_frontier.json`` bytes (CI's search-smoke job enforces
+this with ``cmp``).
+
 Run:  PYTHONPATH=src python examples/dse_sweep.py --space small
       add --space tiny for the 4-variant CI smoke sweep
       add --fresh to ignore an existing checkpoint
+      add --search nsga2 --generations 4 --population 12 to search
 """
 import argparse
 import sys
@@ -29,15 +39,32 @@ import time
 sys.path.insert(0, "src")
 
 from repro.core import MapperOptions, Toolchain
-from repro.dse import (SPACE_NAMES, frontier, frontier_table, get_space,
-                       run_sweep, write_artifacts)
+from repro.dse import (SEARCH_ALGOS, SPACE_NAMES, SearchConfig, frontier,
+                       frontier_table, get_space, run_search, run_sweep,
+                       write_artifacts)
 
 
 def main():
     ap = argparse.ArgumentParser(
         description="CGRA architecture design-space explorer")
-    ap.add_argument("--space", default="small", choices=SPACE_NAMES,
-                    help="variant set to sweep (default: small)")
+    ap.add_argument("--space", default="small", metavar="NAME",
+                    help=f"variant set to sweep (one of "
+                         f"{', '.join(SPACE_NAMES)}; default: small)")
+    ap.add_argument("--search", default=None, choices=SEARCH_ALGOS,
+                    metavar="ALGO",
+                    help="search the space instead of sweeping it "
+                         f"exhaustively (one of {', '.join(SEARCH_ALGOS)})")
+    ap.add_argument("--generations", type=int, default=4, metavar="N",
+                    help="search rounds: NSGA-II generations / halving "
+                         "rungs (default: 4)")
+    ap.add_argument("--population", type=int, default=12, metavar="N",
+                    help="NSGA-II population per generation / halving "
+                         "finalists (default: 12)")
+    ap.add_argument("--search-seed", type=int, default=0, metavar="S",
+                    help="search RNG seed; the whole trajectory is a pure "
+                         "function of it (default: 0)")
+    ap.add_argument("--mutation", type=float, default=0.25, metavar="P",
+                    help="per-knob mutation probability (default: 0.25)")
     ap.add_argument("--out", default=".", metavar="DIR",
                     help="directory for report artifacts (default: cwd)")
     ap.add_argument("--seeds", type=int, default=1, metavar="N",
@@ -74,8 +101,13 @@ def main():
     if args.seeds < 1:
         ap.error("--seeds must be >= 1 (use --no-verify to skip "
                  "simulation-based verification explicitly)")
+    if args.search and (args.generations < 1 or args.population < 2):
+        ap.error("--search needs --generations >= 1 and --population >= 2")
 
-    points = get_space(args.space)
+    try:
+        points = get_space(args.space)
+    except ValueError as e:
+        ap.error(str(e))  # unknown --space: list the valid SPACE_NAMES
     checkpoint = args.checkpoint
     if checkpoint is None:
         checkpoint = f"{args.out}/dse_checkpoint.json"
@@ -108,25 +140,50 @@ def main():
     tc = Toolchain(options=MapperOptions(ii_max=args.ii_max),
                    cache_dir=args.cache_dir)
     seeds = list(range(args.seeds))
-    print(f"# sweeping {len(points)} variants x ten kernels "
-          f"(space={args.space}, seeds={seeds}"
-          + (f", workers={fleet_cfg.groups}" if fleet_cfg else "") + ")")
+    search_extra = None
+    bench_name = "dse_sweep"
     t0 = time.time()
-    results = run_sweep(points, seeds=seeds, toolchain=tc,
+    if args.search:
+        cfg = SearchConfig(algo=args.search, seed=args.search_seed,
+                           generations=args.generations,
+                           population=args.population,
+                           mutation=args.mutation)
+        print(f"# searching {len(points)}-point universe with "
+              f"{cfg.algo} (seed={cfg.seed}, generations="
+              f"{cfg.generations}, population={cfg.population}"
+              + (f", workers={fleet_cfg.groups}" if fleet_cfg else "") + ")")
+        sr = run_search(points, cfg, seeds=seeds, toolchain=tc,
                         checkpoint=checkpoint, jobs=args.jobs,
                         verify=not args.no_verify, fleet=fleet_cfg,
                         log=print)
+        results = sr.evaluated
+        bench_name = "dse_search"
+        search_extra = {"search": {"config": cfg.to_json_dict(),
+                                   "population": sr.population,
+                                   "history": sr.history,
+                                   "n_requested": sr.n_requested,
+                                   "n_partial": sr.n_partial}}
+    else:
+        print(f"# sweeping {len(points)} variants x ten kernels "
+              f"(space={args.space}, seeds={seeds}"
+              + (f", workers={fleet_cfg.groups}" if fleet_cfg else "") + ")")
+        results = run_sweep(points, seeds=seeds, toolchain=tc,
+                            checkpoint=checkpoint, jobs=args.jobs,
+                            verify=not args.no_verify, fleet=fleet_cfg,
+                            log=print)
     dt = time.time() - t0
 
     print()
     print(frontier_table(results))
     front = frontier(results)
     ok = sum(1 for r in results if r.ok)
+    verb = "searched" if args.search else "swept"
     print(f"\n# {ok}/{len(results)} variants fully verified, "
-          f"{len(front)} on the Pareto frontier, swept in {dt:.1f}s "
+          f"{len(front)} on the Pareto frontier, {verb} in {dt:.1f}s "
           f"(warm re-runs are cache hits)")
     paths = write_artifacts(results, args.out, space=args.space,
-                            seeds=seeds, verified=not args.no_verify)
+                            seeds=seeds, verified=not args.no_verify,
+                            bench_name=bench_name, extra=search_extra)
     for name, path in paths.items():
         print(f"# wrote {path}")
 

@@ -8,17 +8,21 @@ instead of one per ``verify`` call, and repeated verification sweeps (CI,
 architecture exploration) reuse the executables for the lifetime of the
 process, across every ``Toolchain`` and ``CompiledKernel`` instance.
 
-Two bucketing knobs cap retraces from near-miss shapes:
+Three bucketing knobs cap retraces from near-miss shapes:
 
   * ``bucket_batch`` rounds the batch (seed count) up to the next power of
     two — padded rows are simulated and discarded by the caller;
   * ``bucket_cycles`` rounds the cycle count up, keeping 4 significant
-    bits (<= 12.5%% padded cycles) — cycles past the schedule are dead by
+    bits (<= 12.5% padded cycles) — cycles past the schedule are dead by
     construction: every STORE is gated by the control module's
-    iteration-validity window, so final memory is untouched.
+    iteration-validity window, so final memory is untouched;
+  * ``bucket_rf`` (multi-architecture stacking only) rounds the
+    register-file width up so fabrics differing only in RF provisioning
+    share one executable — padded registers are dead lanes (write ports
+    KIND_NONE, reads clipped to the config's real RF).
 
-Both paddings preserve the bit-exactness contract pinned by
-``tests/test_batched_verify.py``.
+All paddings preserve the bit-exactness contract pinned by
+``tests/test_batched_verify.py`` and ``tests/test_multiarch_sim.py``.
 """
 from __future__ import annotations
 
@@ -29,7 +33,15 @@ from typing import Callable, Dict
 
 @dataclass(frozen=True)
 class SimSignature:
-    """Everything static that determines a batched-simulator executable."""
+    """Everything static that determines a batched-simulator executable.
+
+    ``multi=True`` marks the multi-architecture variant of the body, where
+    configuration planes carry a leading batch axis (one config per memory
+    row) so one executable scores many candidate fabrics sharing this
+    shape bucket; its state-vector layout depends on the live-in register
+    count, so ``LI`` joins the key there (the single-config body infers LI
+    from the traced live-in stack and keeps the historical key).
+    """
     II: int
     P: int
     RF: int
@@ -37,6 +49,8 @@ class SimSignature:
     n_iters: int
     n_cycles: int
     batch: int
+    LI: int = 0
+    multi: bool = False
 
 
 def bucket_batch(batch: int) -> int:
@@ -50,13 +64,40 @@ def bucket_cycles(n_cycles: int) -> int:
     """Round a cycle count up to its 4-significant-bit bucket boundary.
 
     Keeps at most 8 buckets per octave, so the padding overhead is bounded
-    by 12.5%% of simulated cycles while distinct ``n_cycles`` values (and
+    by 12.5% of simulated cycles while distinct ``n_cycles`` values (and
     therefore traces) stay capped.
     """
     if n_cycles <= 8:
         return max(1, n_cycles)
     quantum = 1 << (n_cycles.bit_length() - 4)
     return -(-n_cycles // quantum) * quantum
+
+
+def bucket_rows(rows: int) -> int:
+    """Batch-row bucket of the *multi-architecture* stacked body: same
+    4-significant-bit rounding as ``bucket_cycles`` (<= 12.5% padded
+    rows), instead of ``bucket_batch``'s power of two (up to 100%).
+    Stacked batches are sums of per-config seed batches — pow-of-two
+    rounding of e.g. 40 rows to 64 wastes more simulated rows than the
+    launch it shares, and on a compute-bound backend padded rows are
+    pure loss.  Single-config batches keep pow-of-two: they are seed
+    counts, small and already round."""
+    return bucket_cycles(rows)
+
+
+def bucket_rf(rf: int) -> int:
+    """Register-file width bucket of the *multi-architecture* stacked
+    body: every RF provisioning up to 16 pads to 16 registers (wider ones
+    round up to the next power of two), so fabrics that differ only in
+    routing-register provisioning — the axis a DSE search explores
+    hardest — share one executable.  Padded registers are dead lanes
+    (never written: their write ports are KIND_NONE; never read: gather
+    indices clip to the config's own RF), so stacking stays bit-exact.
+    The single-config path keeps exact RF — padding there would buy
+    nothing and cost state width."""
+    if rf <= 16:
+        return 16
+    return 1 << (rf - 1).bit_length()
 
 
 class _Entry:

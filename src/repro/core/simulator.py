@@ -27,7 +27,13 @@ memory images (``simulate`` is the batch-of-one case):
     kernel in a single XLA launch, with the batched image buffer donated.
     Executables come from a process-wide shape-bucketed cache
     (``repro.core.simcache``), so a verification fleet across many kernels
-    and seeds triggers a handful of traces, not one per call.
+    and seeds triggers a handful of traces, not one per call;
+  * ``simulate_multi`` — many *configurations* sharing a shape bucket
+    (``stack_signature``) in a single XLA launch: the config planes gain a
+    leading batch-row axis and ride alongside the memory images, so one
+    executable scores dozens of candidate fabrics of a design-space
+    search.  Per (config, image) row the computation is op-for-op the
+    single-config body, so results stay bit-identical.
 
 The body is hand-batched rather than ``vmap``-ed, and shaped around what
 profiles as expensive on small CGRA configurations:
@@ -48,7 +54,8 @@ before entering the traced body: the pre-tiled per-cycle streams shrink
 from __future__ import annotations
 
 import functools
-from typing import Dict, List, Tuple
+from collections import OrderedDict
+from typing import Dict, List, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -126,10 +133,13 @@ _SLOT_PLANES = ("op", "imm", "port_idx", "rf_mask", "xo_mask",
 _TILE_BYTES_LIMIT = 64 << 20
 
 
-def _tile_bytes_per_cycle(c: Dict[str, jnp.ndarray]) -> int:
+def _tile_bytes_per_cycle(c: Dict[str, jnp.ndarray], II: int) -> int:
     """Bytes of pre-tiled stream one simulated cycle costs: the sum over
-    slot planes of (elements per slot) x (narrowed item size)."""
-    return sum(int(np.prod(c[k].shape[1:])) * c[k].dtype.itemsize
+    slot planes of (elements per slot) x (narrowed item size).  Dividing
+    the total element count by II covers both plane layouts — ``[II,...]``
+    single-config and ``[B,II,...]`` config-batched (where every batch
+    row's slot is streamed, so the per-cycle cost scales with B)."""
+    return sum(int(np.prod(c[k].shape)) // II * c[k].dtype.itemsize
                for k in _SLOT_PLANES)
 
 
@@ -148,14 +158,19 @@ def _state_layout(P: int, RF: int, LI: int):
 
 
 def _port_gather_idx(kind: np.ndarray, idx: np.ndarray, cfg: SimConfig,
-                     LI: int) -> np.ndarray:
+                     LI: int, rf_pad: int) -> np.ndarray:
     """Host-side compilation of one mux bank ([II,P,K] kind/idx planes)
     into flat state-vector gather indices — the per-kind select chain of
     the mux fabric becomes pure data, so the traced body resolves every
-    port of every bank with a single gather."""
+    port of every bank with a single gather.
+
+    ``rf_pad >= cfg.RF`` is the register-file width of the *executable*'s
+    state layout (``simulate_multi`` pads the group to one RF bucket so
+    differently-provisioned fabrics share a trace); reads still clip to
+    the config's own RF, so padded rows are never addressed."""
     P, RF = cfg.P, cfg.RF
     xo_off, reg_off, fu_off, imm_off, li_off, zero_off = \
-        _state_layout(P, RF, LI)
+        _state_layout(P, rf_pad, LI)
     II, _, K = kind.shape
     pe = np.arange(P)[None, :, None]
     nbr = np.asarray(cfg.nbr_idx)                          # [P,4]
@@ -167,7 +182,7 @@ def _port_gather_idx(kind: np.ndarray, idx: np.ndarray, cfg: SimConfig,
         val = nbr[:, d][None, :, None] * 4 + _OPP_IDX[d] + xo_off
         out = np.where(sel, np.broadcast_to(val, kind.shape), out)
     out = np.where(kind == KIND_REG,
-                   reg_off + pe * RF + np.clip(idx, 0, RF - 1), out)
+                   reg_off + pe * rf_pad + np.clip(idx, 0, RF - 1), out)
     out = np.where(kind == KIND_FUOUT, fu_off + pe, out)
     out = np.where(kind == KIND_IMM, imm_off + pe, out)
     out = np.where(kind == KIND_LIREG,
@@ -176,26 +191,38 @@ def _port_gather_idx(kind: np.ndarray, idx: np.ndarray, cfg: SimConfig,
                       else np.int32)
 
 
-def _as_jnp(cfg: SimConfig) -> Dict[str, jnp.ndarray]:
-    """Device copies of the simulator's config planes, cached on the
-    SimConfig so repeated runs/verifies skip the host-side compilation and
-    the transfer.
+def _host_planes(cfg: SimConfig,
+                 rf_pad: int = 0) -> Dict[str, np.ndarray]:
+    """Host-side compilation of a SimConfig into the simulator's slot
+    planes (numpy), cached on the SimConfig (keyed by the RF width the
+    executable will use; 0 / cfg.RF is the plain single-config layout).
 
     Starting from the dtype-narrowed planes, the three mux banks are
     compiled into one ``port_idx`` gather plane over the flat state
     vector, write masks replace the RF/crossbar kind tests, and the
     per-slot store-lane table is derived from the opcode plane (see
-    ``_SLOT_PLANES``).
+    ``_SLOT_PLANES``).  With ``rf_pad > cfg.RF`` the RF write-port bank
+    pads to ``rf_pad`` ports with unconfigured (KIND_NONE, mask-off)
+    lanes and the state layout stretches to match — the padded register
+    rows are never written or read, which is what lets fabrics with
+    different register-file provisioning stack into one executable
+    bit-exactly.
 
     The cache means a SimConfig is frozen once simulated — and that is
     enforced: building the cache marks the numpy planes read-only, so a
     later in-place edit raises instead of silently diverging from the
-    device copies.  Configs come out of ``generate_config``/``from_json``
-    and are never mutated by the flow; anyone editing one by hand (tests
-    injecting faults) must do so before the first run or delete
-    ``_jnp_planes`` and restore ``.flags.writeable``.
+    compiled copies.  Configs come out of ``generate_config``/
+    ``from_json`` and are never mutated by the flow; anyone editing one by
+    hand (tests injecting faults) must do so before the first run or
+    delete ``_np_planes``/``_jnp_planes`` and restore
+    ``.flags.writeable``.
     """
-    cached = getattr(cfg, "_jnp_planes", None)
+    R = rf_pad or cfg.RF
+    assert R >= cfg.RF, "rf_pad must not shrink the register file"
+    by_rf = getattr(cfg, "_np_planes", None)
+    if by_rf is None:
+        by_rf = cfg._np_planes = {}
+    cached = by_rf.get(R)
     if cached is None:
         p = narrowed_planes(cfg)
         II, P, LI = cfg.II, cfg.P, max(1, cfg.LI)
@@ -206,31 +233,51 @@ def _as_jnp(cfg: SimConfig) -> Dict[str, jnp.ndarray]:
                               else np.int16)
         for s, l in enumerate(lanes):
             store_lanes[s, :len(l)] = l
+        rf_kind = np.asarray(p["rf_kind"])
+        rf_idx = np.asarray(p["rf_idx"])
+        if R > cfg.RF:                   # pad write-port bank: dead lanes
+            pad = ((0, 0), (0, 0), (0, R - cfg.RF))
+            rf_kind = np.pad(rf_kind, pad, constant_values=KIND_NONE)
+            rf_idx = np.pad(rf_idx, pad, constant_values=0)
         kind_all = np.concatenate(
-            [p["src_kind"], p["rf_kind"], p["xo_kind"]], axis=2)
+            [p["src_kind"], rf_kind, p["xo_kind"]], axis=2)
         idx_all = np.concatenate(
-            [p["src_idx"], p["rf_idx"], p["xo_idx"]], axis=2)
-        planes = {
-            "op": p["op"], "imm": p["imm"],
-            "port_idx": _port_gather_idx(kind_all, idx_all, cfg, LI),
-            "rf_mask": np.asarray(p["rf_kind"]) != KIND_NONE,
+            [p["src_idx"], rf_idx, p["xo_idx"]], axis=2)
+        cached = {
+            "op": np.asarray(p["op"]), "imm": np.asarray(p["imm"]),
+            "port_idx": _port_gather_idx(kind_all, idx_all, cfg, LI, R),
+            "rf_mask": rf_kind != KIND_NONE,
             "xo_mask": np.asarray(p["xo_kind"]) != KIND_NONE,
-            "force_before": p["force_before"], "force_val": p["force_val"],
-            "mem_off": p["mem_off"], "mem_words": p["mem_words"],
-            "valid_start": p["valid_start"], "store_lanes": store_lanes,
+            "force_before": np.asarray(p["force_before"]),
+            "force_val": np.asarray(p["force_val"]),
+            "mem_off": np.asarray(p["mem_off"]),
+            "mem_words": np.asarray(p["mem_words"]),
+            "valid_start": np.asarray(p["valid_start"]),
+            "store_lanes": store_lanes,
         }
-        cached = {k: jnp.asarray(v) for k, v in planes.items()}
         for k in SimConfig._ARRAY_DTYPES:
             arr = getattr(cfg, k)
             if isinstance(arr, np.ndarray):
                 arr.flags.writeable = False
+        by_rf[R] = cached
+    return cached
+
+
+def _as_jnp(cfg: SimConfig) -> Dict[str, jnp.ndarray]:
+    """Device copies of ``_host_planes(cfg)``, cached on the SimConfig so
+    repeated runs/verifies skip the host-side compilation and the
+    transfer."""
+    cached = getattr(cfg, "_jnp_planes", None)
+    if cached is None:
+        cached = {k: jnp.asarray(v) for k, v in _host_planes(cfg).items()}
         cfg._jnp_planes = cached
     return cached
 
 
 def _sim_body(c: Dict[str, jnp.ndarray], mem0: jnp.ndarray,
               li_stack: jnp.ndarray, *, II: int, P: int, RF: int,
-              bits: int, n_iters: int, n_cycles: int) -> jnp.ndarray:
+              bits: int, n_iters: int, n_cycles: int,
+              cfg_batched: bool = False) -> jnp.ndarray:
     """A batch of memory images through all invocations in one launch.
 
     ``mem0``: [batch, words] initial images (batch=1 is the sequential
@@ -239,6 +286,15 @@ def _sim_body(c: Dict[str, jnp.ndarray], mem0: jnp.ndarray,
     batch and image size specialize from ``mem0``'s shape at trace time.
     Address and time-window sums happen in int32 (the narrowed config
     streams only carry the values).
+
+    ``cfg_batched=True`` is the multi-architecture variant: every config
+    plane carries a leading batch-row axis (``[B, II, ...]``, one config
+    per memory image; ``li_stack`` becomes ``[n_inv, B, P, LI]``), so one
+    launch simulates many *different* fabrics sharing the static shape
+    tuple.  The branches below are trace-time only — with a broadcast
+    config the batched trace degenerates to exactly the single-config
+    graph per row, which is what keeps ``simulate_multi`` bit-identical
+    to ``simulate_batch`` per element.
     """
     B, W = mem0.shape
     LI = li_stack.shape[-1]
@@ -254,11 +310,16 @@ def _sim_body(c: Dict[str, jnp.ndarray], mem0: jnp.ndarray,
     # Tiling is O(n_cycles) memory, so very long simulations (bounded by
     # _TILE_BYTES_LIMIT total tiled-stream bytes) keep the II-sized
     # planes and gather per cycle instead.
-    pretile = n_cycles * _tile_bytes_per_cycle(c) <= _TILE_BYTES_LIMIT
+    pretile = n_cycles * _tile_bytes_per_cycle(c, II) <= _TILE_BYTES_LIMIT
     t_arr = jnp.arange(n_cycles)
     if pretile:
         slots = jnp.arange(n_cycles) % II
-        xs_cfg = {k: c[k][slots] for k in _SLOT_PLANES}
+        if cfg_batched:
+            # [B,II,...] -> [n_cycles,B,...]: scan consumes cycle-major
+            xs_cfg = {k: jnp.moveaxis(c[k][:, slots], 0, 1)
+                      for k in _SLOT_PLANES}
+        else:
+            xs_cfg = {k: c[k][slots] for k in _SLOT_PLANES}
     else:
         xs_cfg = {}
 
@@ -268,7 +329,11 @@ def _sim_body(c: Dict[str, jnp.ndarray], mem0: jnp.ndarray,
         fu0 = jnp.zeros((B, P), dtype=dt)
         ldp0 = jnp.zeros((B, P), dtype=dt)
         fl0 = jnp.zeros((B, P), dtype=bool)
-        li_flat = jnp.broadcast_to(li.reshape(-1).astype(dt), (B, P * LI))
+        if cfg_batched:
+            li_flat = li.reshape(B, P * LI).astype(dt)
+        else:
+            li_flat = jnp.broadcast_to(li.reshape(-1).astype(dt),
+                                       (B, P * LI))
         zero_cell = jnp.zeros((B, 1), dtype=dt)
         state_len = P * (4 + RF + 2 + LI) + 1
         state_row_off = (jnp.arange(B) * state_len)[:, None, None]  # [B,1,1]
@@ -278,18 +343,21 @@ def _sim_body(c: Dict[str, jnp.ndarray], mem0: jnp.ndarray,
             t, ct = xs
             if not pretile:
                 slot = t % II
-                ct = {k: c[k][slot] for k in _SLOT_PLANES}
-            opc = ct["op"]
+                ct = {k: (c[k][:, slot] if cfg_batched else c[k][slot])
+                      for k in _SLOT_PLANES}
+            opc = ct["op"]                                # [B,P] | [P]
 
             # the whole mux fabric (operand + RF-write + crossbar-write
             # ports) resolves as one flat 1D gather from the start-of-
             # cycle state snapshot (layout: _state_layout; indices
             # precompiled per slot by _port_gather_idx, offset per batch
             # row here — flat scalar gathers are what XLA CPU does fast)
+            imm = ct["imm"].astype(dt)
+            if not cfg_batched:
+                imm = jnp.broadcast_to(imm[None], (B, P))
             state = jnp.concatenate(
                 [xo.reshape(B, -1), regs.reshape(B, -1), fu,
-                 jnp.broadcast_to(ct["imm"].astype(dt)[None], (B, P)),
-                 li_flat, zero_cell], axis=1)             # [B,SL]
+                 imm, li_flat, zero_cell], axis=1)        # [B,SL]
             pidx = state_row_off + ct["port_idx"].astype(jnp.int32)
             v = jnp.take(state.reshape(-1), pidx)         # [B,P,3+RF+4]
 
@@ -311,12 +379,21 @@ def _sim_body(c: Dict[str, jnp.ndarray], mem0: jnp.ndarray,
             is_store = opc == OPC_STORE
             vstart = ct["valid_start"].astype(jnp.int32)
             window = is_store & (t >= vstart) & (t < vstart + n_iters * II)
-            sl = ct["store_lanes"]                        # [S], -1 padded
-            slc = jnp.clip(sl, 0, P - 1)
-            gate = window[slc] & (sl >= 0)                # [S]
-            st_addr = jnp.where(gate, gaddr[:, slc], scratch)
+            sl = ct["store_lanes"]                        # [B,S] | [S]
+            if cfg_batched:
+                slc = jnp.clip(sl, 0, P - 1).astype(jnp.int32)
+                gate = (jnp.take_along_axis(window, slc, axis=1)
+                        & (sl >= 0))                      # [B,S]
+                st_src = jnp.take_along_axis(gaddr, slc, axis=1)
+                st_val = jnp.take_along_axis(b, slc, axis=1)
+            else:
+                slc = jnp.clip(sl, 0, P - 1)
+                gate = window[slc] & (sl >= 0)            # [S]
+                st_src = gaddr[:, slc]
+                st_val = b[:, slc]
+            st_addr = jnp.where(gate, st_src, scratch)
             scr_val = jnp.take(mem, scratch)              # [B,1]
-            mem = mem.at[st_addr].set(jnp.where(gate, b[:, slc], scr_val))
+            mem = mem.at[st_addr].set(jnp.where(gate, st_val, scr_val))
 
             fu_next = jnp.where(fl, ldp,
                                 jnp.where((opc != OPC_NONE) & ~is_load
@@ -340,7 +417,7 @@ def _sim_body(c: Dict[str, jnp.ndarray], mem0: jnp.ndarray,
 
 _run_invocations = functools.partial(
     jax.jit, static_argnames=("II", "P", "RF", "bits", "n_iters",
-                              "n_cycles"))(_sim_body)
+                              "n_cycles", "cfg_batched"))(_sim_body)
 
 
 def _build_batched(sig: simcache.SimSignature):
@@ -351,7 +428,7 @@ def _build_batched(sig: simcache.SimSignature):
     would just warn)."""
     body = functools.partial(_sim_body, II=sig.II, P=sig.P, RF=sig.RF,
                              bits=sig.bits, n_iters=sig.n_iters,
-                             n_cycles=sig.n_cycles)
+                             n_cycles=sig.n_cycles, cfg_batched=sig.multi)
     donate = (1,) if jax.default_backend() != "cpu" else ()
     return jax.jit(body, donate_argnums=donate)
 
@@ -425,3 +502,167 @@ def simulate_batch(cfg: SimConfig, banks_batch: List[Dict[str, np.ndarray]],
     out = np.asarray(fn(_as_jnp(cfg), jnp.asarray(mem),
                         jnp.asarray(li_stack)))
     return [_mem_to_banks(cfg, out[i], banks_batch[i]) for i in range(B)]
+
+
+# ------------------------------------------------- multi-architecture batch
+def stack_signature(cfg: SimConfig, n_iters: int,
+                    n_invocations: int) -> Tuple[int, ...]:
+    """The shape bucket a (config, schedule) pair simulates in.
+
+    Configs agreeing on this tuple can be stacked into one multi-arch
+    executable (``simulate_multi``): every element is a *static* shape
+    input of the traced body — per-arch values (opcode planes, neighbour
+    tables, bank offsets, live-in values) ride the batch axis as data.
+    The cycle count enters bucketed, so near-miss schedule depths stack
+    too (padded cycles are store-gated no-ops); the register-file width
+    enters bucketed (``simcache.bucket_rf``), so fabrics differing only
+    in RF provisioning stack too — each config's planes pad to the
+    bucket with dead write ports, and its own reads never index past its
+    real RF.
+    """
+    return (cfg.II, cfg.P, simcache.bucket_rf(cfg.RF), cfg.bits,
+            max(1, cfg.LI), n_iters, n_invocations,
+            simcache.bucket_cycles(cfg.n_cycles(n_iters)))
+
+
+def _stack_planes(per: List[Dict[str, np.ndarray]],
+                  reps: List[int]) -> Dict[str, np.ndarray]:
+    """Stack per-config host planes into ``[B, II, ...]`` rows, repeating
+    each config for its memory-image count.  Store-lane tables pad to the
+    group-wide lane count with -1 (dead lanes); value planes promote to
+    the group's common dtype — both value-preserving, so stacked rows
+    decode exactly as their single-config originals."""
+    S = max(p["store_lanes"].shape[1] for p in per)
+    out: Dict[str, np.ndarray] = {}
+    for k in per[0]:
+        arrs = []
+        for p, rep in zip(per, reps):
+            a = p[k]
+            if k == "store_lanes" and a.shape[1] < S:
+                a = np.concatenate(
+                    [a, np.full((a.shape[0], S - a.shape[1]), -1,
+                                dtype=a.dtype)], axis=1)
+            arrs.append(np.repeat(a[None], rep, axis=0))
+        dtype = np.result_type(*(a.dtype for a in arrs))
+        out[k] = np.concatenate([a.astype(dtype, copy=False)
+                                 for a in arrs], axis=0)
+    return out
+
+
+# stacked-plane device cache: the multi-arch analogue of the per-config
+# ``_jnp_planes`` memo.  A search cohort is re-simulated (warm executable)
+# many times — rung after rung, benchmark repeats — and restacking +
+# re-uploading ~10 config planes per call would otherwise dominate the
+# launch it saves.  Keyed by config identities (the cached tuple holds
+# strong refs, so an id can never be recycled while its key is live);
+# bounded FIFO keeps one search's worth of groups.
+_STACK_PLANES_CACHE: "OrderedDict[tuple, tuple]" = OrderedDict()
+_STACK_PLANES_MAX = 32
+
+
+def _stacked_jnp_planes(cfgs: Tuple[SimConfig, ...],
+                        reps: Tuple[int, ...], pad: int,
+                        rf_pad: int) -> Dict:
+    key = (tuple(id(c) for c in cfgs), reps, pad, rf_pad)
+    hit = _STACK_PLANES_CACHE.get(key)
+    if hit is not None:
+        _STACK_PLANES_CACHE.move_to_end(key)
+        return hit[1]
+    planes = _stack_planes([_host_planes(c, rf_pad) for c in cfgs],
+                           list(reps))
+    if pad:  # pad to the batch bucket by repeating the last config row
+        planes = {k: np.concatenate([v, np.repeat(v[-1:], pad, axis=0)])
+                  for k, v in planes.items()}
+    jp = {k: jnp.asarray(v) for k, v in planes.items()}
+    _STACK_PLANES_CACHE[key] = (cfgs, jp)
+    while len(_STACK_PLANES_CACHE) > _STACK_PLANES_MAX:
+        _STACK_PLANES_CACHE.popitem(last=False)
+    return jp
+
+
+def simulate_multi(items: Sequence[Tuple[SimConfig,
+                                         List[Dict[str, np.ndarray]],
+                                         List[Dict[str, int]]]],
+                   n_iters: int) -> List[List[Dict[str, np.ndarray]]]:
+    """Simulate many *configurations* in one XLA launch.
+
+    ``items``: a list of ``(cfg, banks_batch, invocations)`` triples — all
+    sharing one :func:`stack_signature` — e.g. the same kernel compiled
+    onto many candidate fabrics of a design-space search, each with its
+    own seed batch.  Config planes are stacked along the batch axis next
+    to the memory images, so the whole group is a single executable
+    launch; per (config, image) element the result is bit-identical to
+    ``simulate_batch`` on that config alone (pinned by
+    ``tests/test_multiarch_sim.py``).
+
+    Memory rows pad to the group's widest image (each config addresses
+    only its own ``total_words``; the shared scratch word sits at the
+    padded row end), the batch rounds up to its power-of-two bucket, and
+    every config's register file pads to the group's RF bucket
+    (``simcache.bucket_rf``) with dead write ports, so signatures — and
+    executables — are shared with other groups of the same shapes and
+    across RF provisioning variants.  Returns one list of final-banks
+    dicts per item, in item order.
+    """
+    items = [(cfg, list(bb), list(inv)) for cfg, bb, inv in items]
+    out: List[List[Dict[str, np.ndarray]]] = [[] for _ in items]
+    live = [i for i, (_, bb, _inv) in enumerate(items) if bb]
+    if not live:
+        return out
+    sigs = sorted({stack_signature(items[i][0], n_iters, len(items[i][2]))
+                   for i in live})
+    if len(sigs) != 1:
+        raise ValueError(
+            f"simulate_multi: items span {len(sigs)} shape buckets "
+            f"{sigs}; stack only configs sharing one stack_signature")
+    II, P, RF, bits, LI, _, n_inv, n_cycles = sigs[0]
+    if n_inv == 0:
+        # nothing to run: final images are the initial images
+        for i in live:
+            cfg, bb, _ = items[i]
+            out[i] = [_mem_to_banks(cfg, _banks_to_mem(cfg, b), b)
+                      for b in bb]
+        return out
+    if len(live) == 1:
+        # a group of one is the plain batched path (shares its executable
+        # with every non-stacked caller)
+        i = live[0]
+        cfg, bb, inv = items[i]
+        out[i] = simulate_batch(cfg, bb, inv, n_iters)
+        return out
+
+    reps = [len(items[i][1]) for i in live]
+    B = sum(reps)
+    W = max(items[i][0].total_words for i in live)
+    mem = np.zeros((B, W), dtype=np.int16 if bits == 16 else np.int32)
+    row = 0
+    for i in live:
+        cfg, bb, _ = items[i]
+        for b in bb:
+            mem[row, :cfg.total_words] = _banks_to_mem(cfg, b)
+            row += 1
+    li = np.concatenate(
+        [np.repeat(np.stack([items[i][0].livein_array(inv)
+                             for inv in items[i][2]])[:, None],
+                   rep, axis=1)
+         for i, rep in zip(live, reps)], axis=1)       # [n_inv,B,P,LI]
+    sig = simcache.SimSignature(
+        II=II, P=P, RF=RF, bits=bits, n_iters=n_iters, n_cycles=n_cycles,
+        batch=simcache.bucket_rows(B), LI=LI, multi=True)
+    pad = sig.batch - B
+    if pad:  # pad to the bucket by repeating the last row everywhere
+        mem = np.concatenate([mem, np.repeat(mem[-1:], pad, axis=0)])
+        li = np.concatenate([li, np.repeat(li[:, -1:], pad, axis=1)],
+                            axis=1)
+    planes = _stacked_jnp_planes(tuple(items[i][0] for i in live),
+                                 tuple(reps), pad, RF)
+    fn = simcache.get(sig, lambda: _build_batched(sig))
+    res = np.asarray(fn(planes, jnp.asarray(mem), jnp.asarray(li)))
+    row = 0
+    for i in live:
+        cfg, bb, _ = items[i]
+        out[i] = []
+        for b in bb:
+            out[i].append(_mem_to_banks(cfg, res[row], b))
+            row += 1
+    return out

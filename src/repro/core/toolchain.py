@@ -44,7 +44,7 @@ from typing import Dict, Iterable, List, Optional, Sequence
 import numpy as np
 
 from .adl import CGRAArch
-from .config_gen import SimConfig, generate_config
+from .config_gen import ConfigConflict, SimConfig, generate_config
 from .dfg import DFG
 from .kernels_lib import KernelSpec
 from .layout import DataLayout
@@ -109,11 +109,23 @@ def _compile_worker(payload: str) -> str:
     opt = MapperOptions.from_json_dict(d["options"])
     try:
         mapping = map_kernel_opts(dfg, arch, layout, opt)
-    except MapError as e:
-        return json.dumps({"map_error": str(e)})
-    cfg = generate_config(mapping, layout)
+        cfg = generate_config(mapping, layout)
+    except (MapError, ConfigConflict) as e:
+        return json.dumps({"map_error": _compile_error_str(e)})
     return json.dumps({"mapping": mapping.to_json_dict(),
                        "cfg": json.loads(cfg.to_json())})
+
+
+def _compile_error_str(e: Exception) -> str:
+    """One canonical error string per compile failure mode.  A
+    ConfigConflict (the mapper accepted a schedule the crossbar fabric
+    cannot realize — possible on heavily heterogeneous variants) is an
+    infeasibility *result* exactly like MapError: same message in the
+    fleet worker and the sequential path, so the memoized failure is
+    bit-identical either way."""
+    if isinstance(e, ConfigConflict):
+        return f"configuration conflict: {e}"
+    return str(e)
 
 
 # --------------------------------------------------------------------------
@@ -248,38 +260,9 @@ class CompiledKernel:
         seeds = list(seeds)
         if not seeds:
             return self
-        if self.spec is not None:
-            from .verify import (check_dfg_semantics_batch,
-                                 generate_test_data_batch)
-            data = generate_test_data_batch(self.spec, seeds)
-            if check_dfg:
-                check_dfg_semantics_batch(self.spec, data)
-            init_batch = [data.init_row(i) for i in range(len(seeds))]
-            expected = data.expected_banks
-        else:
-            from .verify import reference_banks_batch
-            init_batch = [self.random_banks(s) for s in seeds]
-            expected = reference_banks_batch(
-                self.dfg,
-                {k: np.stack([ib[k] for ib in init_batch])
-                 for k in init_batch[0]},
-                self.invocations, self.mapped_iters,
-                self.arch.datapath_bits)
+        init_batch, expected = _batch_oracle(self, seeds, check_dfg)
         finals = self.run_batch(init_batch)
-        live = set(self.liveout_banks())
-        for i, (seed, final) in enumerate(zip(seeds, finals)):
-            for bank in sorted(final):
-                got = np.asarray(final[bank])
-                # non-liveout banks have no oracle data to compare; they
-                # must simply come back untouched
-                exp = np.asarray(expected[bank][i] if bank in live
-                                 else init_batch[i][bank])
-                if not np.array_equal(got, exp):
-                    bad = np.nonzero(got != exp)[0][:8]
-                    raise AssertionError(
-                        f"{self.name} (II={self.II}, seed={seed}): batched "
-                        f"simulation mismatch in {bank} at words "
-                        f"{bad.tolist()}: got {got[bad]}, want {exp[bad]}")
+        _check_batch(self, seeds, init_batch, expected, finals)
         from .verify import xval_enabled
         if xval_enabled():
             from ..isa.xval import cross_validate
@@ -320,6 +303,100 @@ class CompiledKernel:
             invocations=d["invocations"], meta=d["meta"],
             options=MapperOptions.from_json_dict(d["options"]),
             cache_key=d["cache_key"])
+
+
+# --------------------------------------------------------------------------
+def _batch_oracle(ck: CompiledKernel, seeds: Sequence[int],
+                  check_dfg: bool):
+    """Test vectors + expected final banks for one kernel over a seed
+    batch — the ``verify_batch`` oracle, shared verbatim by the stacked
+    multi-architecture path so both report identical results.  With the
+    builder spec attached the oracle is the golden numpy model on
+    spec-generated data; reloaded artifacts fall back to sequential DFG
+    reference execution on deterministic random bank images."""
+    if ck.spec is not None:
+        from .verify import (check_dfg_semantics_batch,
+                             generate_test_data_batch)
+        data = generate_test_data_batch(ck.spec, seeds)
+        if check_dfg:
+            check_dfg_semantics_batch(ck.spec, data)
+        init_batch = [data.init_row(i) for i in range(len(seeds))]
+        expected = data.expected_banks
+    else:
+        from .verify import reference_banks_batch
+        init_batch = [ck.random_banks(s) for s in seeds]
+        expected = reference_banks_batch(
+            ck.dfg,
+            {k: np.stack([ib[k] for ib in init_batch])
+             for k in init_batch[0]},
+            ck.invocations, ck.mapped_iters,
+            ck.arch.datapath_bits)
+    return init_batch, expected
+
+
+def _check_batch(ck: CompiledKernel, seeds: Sequence[int],
+                 init_batch, expected, finals) -> None:
+    """Word-for-word comparison of simulated final banks against the
+    oracle: live-out banks match ``expected``, every other bank comes back
+    untouched.  Raises AssertionError naming the first offending
+    (seed, bank, words)."""
+    live = set(ck.liveout_banks())
+    for i, (seed, final) in enumerate(zip(seeds, finals)):
+        for bank in sorted(final):
+            got = np.asarray(final[bank])
+            # non-liveout banks have no oracle data to compare; they
+            # must simply come back untouched
+            exp = np.asarray(expected[bank][i] if bank in live
+                             else init_batch[i][bank])
+            if not np.array_equal(got, exp):
+                bad = np.nonzero(got != exp)[0][:8]
+                raise AssertionError(
+                    f"{ck.name} (II={ck.II}, seed={seed}): batched "
+                    f"simulation mismatch in {bank} at words "
+                    f"{bad.tolist()}: got {got[bad]}, want {exp[bad]}")
+
+
+def verify_stacked(kernels: Sequence[CompiledKernel],
+                   seeds: Sequence[int] = (0,),
+                   check_dfg: bool = True) -> List[CompiledKernel]:
+    """Verify many compiled kernels over one seed batch, stacking every
+    group of configs that shares a shape bucket
+    (:func:`~repro.core.simulator.stack_signature`) into a single
+    multi-architecture XLA launch (:func:`simulate_multi`).
+
+    The oracles, the comparison and the error messages are exactly
+    ``verify_batch``'s — only the launch count changes, which is what
+    makes this the throughput path of design-space search evaluation
+    (``BENCH_dse_search``'s evaluated-points-per-second headline).
+    Raises AssertionError on the first mismatch; returns the kernels in
+    input order.
+    """
+    from .simulator import simulate_multi, stack_signature
+    kernels = list(kernels)
+    seeds = list(seeds)
+    if not seeds or not kernels:
+        return kernels
+    groups: Dict[tuple, List[int]] = {}
+    for idx, ck in enumerate(kernels):
+        sig = stack_signature(ck.cfg, ck.mapped_iters,
+                              len(ck.invocations))
+        groups.setdefault(sig, []).append(idx)
+    for sig in sorted(groups):
+        idxs = groups[sig]
+        prep = [(kernels[i],) + _batch_oracle(kernels[i], seeds, check_dfg)
+                for i in idxs]
+        finals = simulate_multi(
+            [(ck.cfg, init_batch, ck.invocations)
+             for ck, init_batch, _exp in prep],
+            n_iters=kernels[idxs[0]].mapped_iters)
+        for (ck, init_batch, expected), f in zip(prep, finals):
+            _check_batch(ck, seeds, init_batch, expected, f)
+    from .verify import xval_enabled
+    if xval_enabled():
+        from ..isa.xval import cross_validate
+        for ck in kernels:
+            cross_validate(ck, seeds=seeds)
+    return kernels
 
 
 # --------------------------------------------------------------------------
@@ -538,11 +615,11 @@ class Toolchain:
                 raise MapError(f"{err} [cached result]")
         try:
             mapping = map_kernel_opts(spec.dfg, spec.arch, spec.layout, opt)
-        except MapError as e:
+            cfg = generate_config(mapping, spec.layout)
+        except (MapError, ConfigConflict) as e:
             if use_cache:
-                self._cache_store_error(key, str(e), opt)
-            raise
-        cfg = generate_config(mapping, spec.layout)
+                self._cache_store_error(key, _compile_error_str(e), opt)
+            raise MapError(_compile_error_str(e)) from e
         return self._finish(spec, opt, key, mapping, cfg, use_cache)
 
     def compile_many(self, specs: Iterable[KernelSpec],
@@ -667,12 +744,13 @@ class Toolchain:
             try:
                 mapping = map_kernel_opts(spec.dfg, spec.arch, spec.layout,
                                           opt)
-            except MapError as e:
+                cfg = generate_config(mapping, spec.layout)
+            except (MapError, ConfigConflict) as e:
                 if use_cache:
-                    self._cache_store_error(key, str(e), opt)
-                unmapped(idxs, str(e))
+                    self._cache_store_error(key, _compile_error_str(e), opt)
+                unmapped(idxs, _compile_error_str(e))
                 continue
-            finish(key, idxs, mapping, generate_config(mapping, spec.layout))
+            finish(key, idxs, mapping, cfg)
         return results
 
     # --------------------------------------------- instruction-stream export
@@ -713,7 +791,8 @@ class Toolchain:
     def verify_many(self, kernels: Iterable, seeds: Sequence[int] = (0,),
                     check_dfg: bool = True,
                     jobs: Optional[int] = None,
-                    fleet=None) -> List[CompiledKernel]:
+                    fleet=None,
+                    stacked: bool = False) -> List[CompiledKernel]:
         """Batch-verify many kernels over many seeds — the verification-
         fleet entry point.
 
@@ -731,6 +810,11 @@ class Toolchain:
         path, so it must not silently swap oracles under distribution.
         Raises AssertionError on the first mismatch; returns the compiled
         kernels in input order.
+
+        ``stacked=True`` routes the simulations through
+        :func:`verify_stacked`: kernels sharing a shape bucket batch
+        their *config planes* into one multi-architecture launch — same
+        oracles, same word-for-word comparison, fewer launches.
         """
         items = list(kernels)
         compiled: List[Optional[CompiledKernel]] = [
@@ -740,8 +824,11 @@ class Toolchain:
             done = iter(self.compile_many(todo, jobs=jobs, fleet=fleet))
             compiled = [ck if ck is not None else next(done)
                         for ck in compiled]
-        for ck in compiled:
-            ck.verify_batch(seeds, check_dfg=check_dfg)
+        if stacked:
+            verify_stacked(compiled, seeds, check_dfg=check_dfg)
+        else:
+            for ck in compiled:
+                ck.verify_batch(seeds, check_dfg=check_dfg)
         return compiled
 
 

@@ -13,18 +13,32 @@ area proxy and report the Pareto frontier (``pareto``).
     results = run_sweep(get_space("small"))
     best = frontier(results)
 
-CLI entry point: ``examples/dse_sweep.py --space small``.
+Exhaustive sweeps stop paying off past a few hundred points; ``search``
+adds seeded multi-objective search (NSGA-II / successive halving) over
+the widened ``wide_space`` universe, scored through the batched
+cross-architecture evaluator (``evaluate_points``):
+
+    from repro.dse import get_space, run_search, SearchConfig
+
+    res = run_search(get_space("wide"), SearchConfig(algo="nsga2"))
+
+CLI entry points: ``examples/dse_sweep.py --space small`` (sweep) and
+``examples/dse_sweep.py --space wide --search nsga2`` (search).
 """
-from .space import (ArchPoint, SPACE_NAMES, get_space, full_space,
-                    small_space, tiny_space)
-from .explore import (KernelOutcome, VariantResult, kernel_suite, run_sweep,
-                      SUITE_KERNELS)
+from .space import (ArchPoint, HET_KINDS, SPACE_NAMES, axis_domains,
+                    crossover, full_space, get_space, mutate, small_space,
+                    tiny_space, wide_space)
+from .explore import (KernelOutcome, VariantResult, evaluate_points,
+                      kernel_suite, run_sweep, SUITE_KERNELS)
+from .search import SEARCH_ALGOS, SearchConfig, SearchResult, run_search
 from .pareto import (area_units, frontier, frontier_table, sweep_bench_rows,
                      write_artifacts)
 
 __all__ = [
-    "ArchPoint", "SPACE_NAMES", "get_space", "full_space", "small_space",
-    "tiny_space", "KernelOutcome", "VariantResult", "kernel_suite",
-    "run_sweep", "SUITE_KERNELS", "area_units", "frontier", "frontier_table",
-    "sweep_bench_rows", "write_artifacts",
+    "ArchPoint", "HET_KINDS", "SPACE_NAMES", "axis_domains", "crossover",
+    "full_space", "get_space", "mutate", "small_space", "tiny_space",
+    "wide_space", "KernelOutcome", "VariantResult", "evaluate_points",
+    "kernel_suite", "run_sweep", "SUITE_KERNELS", "SEARCH_ALGOS",
+    "SearchConfig", "SearchResult", "run_search", "area_units", "frontier",
+    "frontier_table", "sweep_bench_rows", "write_artifacts",
 ]

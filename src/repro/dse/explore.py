@@ -140,14 +140,19 @@ class VariantResult:
 
 # ------------------------------------------------------------ checkpoint
 def _fingerprint(options: MapperOptions, seeds: Sequence[int],
-                 verify: bool) -> Dict:
+                 verify: bool,
+                 suite: Optional[Sequence[str]] = None) -> Dict:
     # verify is part of the identity: resuming a --no-verify checkpoint
-    # must not let unsimulated mappings pass as "fully verified"
+    # must not let unsimulated mappings pass as "fully verified".  The
+    # fingerprint deliberately carries only what determines a point's
+    # *evaluation* — never search hyper-parameters — so sweep and search
+    # ledgers interoperate and a short search run is a valid resume
+    # prefix of a longer one.
     return {"schema": CHECKPOINT_SCHEMA,
             "options": options.to_json_dict(),
             "seeds": list(seeds),
             "verify": bool(verify),
-            "suite": list(SUITE_KERNELS)}
+            "suite": list(SUITE_KERNELS if suite is None else suite)}
 
 
 # paths already warned about this process (one warning per path per
@@ -215,6 +220,26 @@ def _store_checkpoint(path: Optional[str], fp: Dict,
 
 
 # ------------------------------------------------------------------ sweep
+def _kernel_outcome(kname: str, spec, ck, status: str,
+                    err: str) -> KernelOutcome:
+    """The scored outcome of one mapped (variant, kernel) cell — shared
+    by the per-variant and the batched evaluators so both emit identical
+    results."""
+    cost = kernel_cost(
+        spec, ck.mapping,
+        array_bytes_moved=sum(p.words for p in
+                              spec.layout.placements.values())
+        * WORD_BYTES)
+    return KernelOutcome(
+        kernel=kname, status=status, II=ck.II, mii=ck.mii,
+        utilization=round(ck.utilization, 6),
+        cycles_per_inv=cost.cycles_per_inv,
+        invocations=cost.invocations,
+        compute_ms=round(cost.compute_ms, 6),
+        total_ms=round(cost.total_ms, 6),
+        from_cache=ck.from_cache, cache_key=ck.cache_key, error=err)
+
+
 def _score_variant(point: ArchPoint, arch: CGRAArch, tc: Toolchain,
                    seeds: Sequence[int], jobs: Optional[int],
                    verify: bool, fleet=None) -> VariantResult:
@@ -254,20 +279,106 @@ def _score_variant(point: ArchPoint, arch: CGRAArch, tc: Toolchain,
                 ck.verify_batch(seeds)
             except AssertionError as e:
                 status, err = "verify_error", str(e)
-        cost = kernel_cost(
-            suite[kname], ck.mapping,
-            array_bytes_moved=sum(p.words for p in
-                                  suite[kname].layout.placements.values())
-            * WORD_BYTES)
-        result.kernels[kname] = KernelOutcome(
-            kernel=kname, status=status, II=ck.II, mii=ck.mii,
-            utilization=round(ck.utilization, 6),
-            cycles_per_inv=cost.cycles_per_inv,
-            invocations=cost.invocations,
-            compute_ms=round(cost.compute_ms, 6),
-            total_ms=round(cost.total_ms, 6),
-            from_cache=ck.from_cache, cache_key=ck.cache_key, error=err)
+        result.kernels[kname] = _kernel_outcome(kname, suite[kname], ck,
+                                                status, err)
     return result
+
+
+def evaluate_points(points: Sequence[ArchPoint], *,
+                    toolchain: Optional[Toolchain] = None,
+                    seeds: Sequence[int] = (0,),
+                    jobs: Optional[int] = None,
+                    verify: bool = True,
+                    check_dfg: bool = True,
+                    suite_names: Optional[Sequence[str]] = None,
+                    fleet=None) -> List[VariantResult]:
+    """Score a whole population of variants in one batched pass — the
+    search driver's evaluator and the throughput path the
+    ``dse_search`` benchmark measures.
+
+    Produces :class:`VariantResult`\\ s identical to ``run_sweep``'s
+    per-point scoring (same mapper, oracles, cost model, rounding — the
+    results interleave freely in one checkpoint ledger); only the
+    batching changes:
+
+      * ONE ``compile_many`` fan-out across every (variant, kernel) unit
+        of the population (instead of one per variant), and
+      * stacked multi-architecture verification
+        (:func:`repro.core.toolchain.verify_stacked`): every group of
+        mapped kernels sharing a shape bucket is a single XLA launch,
+        so one launch scores dozens of candidate fabrics.
+
+    ``suite_names`` restricts evaluation to a subset of
+    ``SUITE_KERNELS`` — the successive-halving driver's partial-fidelity
+    rungs.  A verify mismatch inside a stacked group (contract-breaking,
+    so effectively never) falls back to per-kernel ``verify_batch`` to
+    attribute the failure to its kernel.
+    """
+    from ..core.toolchain import verify_stacked
+    suite_names = list(suite_names or SUITE_KERNELS)
+    tc = toolchain or Toolchain(options=MapperOptions(ii_max=20))
+    results: List[VariantResult] = []
+    units: List[tuple] = []               # (variant index, kernel, spec)
+    for point in points:
+        try:
+            arch = point.build()
+        except ValueError as e:
+            vr = VariantResult(name=point.name, point=point, n_pes=0,
+                               clusters=0, area=0)
+            vr.kernels = {k: KernelOutcome(kernel=k, status="layout_error",
+                                           error=str(e))
+                          for k in suite_names}
+            results.append(vr)
+            continue
+        vr = VariantResult(name=point.name, point=point, n_pes=arch.n_pes,
+                           clusters=max(1, len(arch.clusters)),
+                           area=area_units(arch))
+        results.append(vr)
+        try:
+            suite = kernel_suite(arch)
+        except ValueError as e:
+            vr.kernels = {k: KernelOutcome(kernel=k, status="layout_error",
+                                           error=str(e))
+                          for k in suite_names}
+            continue
+        for k in suite_names:
+            units.append((len(results) - 1, k, suite[k]))
+
+    cks = tc.compile_many([spec for _, _, spec in units], jobs=jobs,
+                          allow_unmapped=True, fleet=fleet)
+    mapped: List[tuple] = []              # (variant index, kernel, spec, ck)
+    for (vi, kname, spec), ck in zip(units, cks):
+        if ck is None:
+            reason = (tc.cached_map_error(spec)
+                      or f"unmappable within ii_max={tc.options.ii_max}")
+            results[vi].kernels[kname] = KernelOutcome(
+                kernel=kname, status="map_error", error=reason)
+        else:
+            mapped.append((vi, kname, spec, ck))
+
+    statuses: Dict[tuple, tuple] = {}
+    if verify and mapped and len(seeds):
+        try:
+            verify_stacked([ck for *_, ck in mapped], seeds,
+                           check_dfg=check_dfg)
+            statuses = {(vi, k): ("ok", "") for vi, k, _, _ in mapped}
+        except AssertionError:
+            for vi, kname, _spec, ck in mapped:
+                try:
+                    ck.verify_batch(seeds, check_dfg=check_dfg)
+                    statuses[(vi, kname)] = ("ok", "")
+                except AssertionError as e:
+                    statuses[(vi, kname)] = ("verify_error", str(e))
+    else:
+        statuses = {(vi, k): ("ok", "") for vi, k, _, _ in mapped}
+    for vi, kname, spec, ck in mapped:
+        status, err = statuses[(vi, kname)]
+        results[vi].kernels[kname] = _kernel_outcome(kname, spec, ck,
+                                                     status, err)
+    for vr in results:  # report order: suite order, as _score_variant emits
+        vr.kernels = {k: vr.kernels[k] for k in suite_names
+                      if k in vr.kernels}
+    return results
 
 
 def run_sweep(points: Sequence[ArchPoint], *,

@@ -114,13 +114,18 @@ def sweep_bench_rows(results: Sequence["VariantResult"]) -> List[Dict]:
 def write_artifacts(results: Sequence["VariantResult"], out_dir: str,
                     space: str = "custom",
                     seeds: Sequence[int] = (0,),
-                    verified: bool = True) -> Dict[str, str]:
-    """Write ``dse_frontier.json`` + ``BENCH_dse_sweep.json`` under
+                    verified: bool = True,
+                    bench_name: str = "dse_sweep",
+                    extra: Optional[Dict] = None) -> Dict[str, str]:
+    """Write ``dse_frontier.json`` + ``BENCH_<bench_name>.json`` under
     ``out_dir``; returns {artifact name: path}.  Both files are
     byte-deterministic for a given sweep configuration and commit.
     ``verified=False`` (a ``--no-verify`` sweep) is stamped into both
     artifacts so score-only output can never masquerade as a verified
-    baseline."""
+    baseline.  ``extra`` (e.g. the search trajectory from
+    :func:`repro.dse.search.run_search`) merges into the frontier report;
+    the defaults keep sweep artifacts byte-identical to earlier
+    releases."""
     os.makedirs(out_dir, exist_ok=True)
     front = frontier(results)
     report = {
@@ -132,6 +137,8 @@ def write_artifacts(results: Sequence["VariantResult"], out_dir: str,
         "variants": [r.to_json_dict() for r in results],
         "frontier": [r.name for r in front],
     }
+    if extra:
+        report.update(extra)
     paths = {}
     p = os.path.join(out_dir, "dse_frontier.json")
     with open(p, "w", encoding="utf-8") as f:
@@ -139,11 +146,12 @@ def write_artifacts(results: Sequence["VariantResult"], out_dir: str,
         f.write("\n")
     paths["dse_frontier.json"] = p
 
-    p = os.path.join(out_dir, "BENCH_dse_sweep.json")
+    fname = f"BENCH_{bench_name}.json"
+    p = os.path.join(out_dir, fname)
     with open(p, "w", encoding="utf-8") as f:
-        json.dump({"bench": "dse_sweep", "schema": BENCH_SCHEMA,
+        json.dump({"bench": bench_name, "schema": BENCH_SCHEMA,
                    "git_sha": _git_sha(), "verified": bool(verified),
                    "rows": sweep_bench_rows(results)}, f, indent=1)
         f.write("\n")
-    paths["BENCH_dse_sweep.json"] = p
+    paths[fname] = p
     return paths

@@ -17,7 +17,11 @@ knob.  Bank ids are assigned so that id 0 is always a left-column bank
 and id 1 a right-column bank, matching the kernel library's layout hints
 (accumulator/weight arrays vs streamed inputs on opposite buses).
 
-Heterogeneity (``het``):
+Heterogeneity (``het``) — the compute-provisioning axis (how much FU
+capability each tile carries; the register-file size is the routing-
+provisioning axis — together the compute-vs-communication trade of
+"Aligned Compute and Communication Provisioning for CGRAs",
+arXiv 2412.08137):
   none     homogeneous FUs (every PE has the full op set)
   alulite  interior PEs keep only the arithmetic core (add/sub/mul/
            shl/shr + const/livein); compare/select/bitwise logic — the
@@ -25,20 +29,38 @@ Heterogeneity (``het``):
            to the boundary columns, modeling cheap ALU-lite interior
            tiles.  (Memory ops are always boundary-only: LOAD/STORE must
            reach a bank bus regardless of the op set.)
+  mulring  interior PEs drop the multiplier (everything else stays):
+           multiplies ride a ring of full-FU boundary tiles, modeling
+           the area-dominant multiplier being provisioned only where
+           operands stream in.
+  checker  checkerboard interiors: alternating interior PEs are ALU-lite
+           (by ``(row + col)`` parity), the rest keep the full set —
+           half-way compute provisioning between ``none`` and
+           ``alulite``.
+
+The search operators at the bottom (``axis_domains`` / ``mutate`` /
+``crossover`` / ``point_valid``) treat the knobs as genes over the
+domains a candidate universe spans — the seeded evolutionary driver in
+:mod:`repro.dse.search` is built on them.
 """
 from __future__ import annotations
 
 from dataclasses import asdict, dataclass
-from typing import Dict, List
+from typing import Dict, List, Sequence, Tuple
 
 from ..core.adl import CGRAArch, MemBank
-from ..core.dfg import Op
+from ..core.dfg import ALU_OPS, MEM_OPS, Op
 
 # the arithmetic core every PE keeps under "alulite" heterogeneity
 LITE_OPS = frozenset(o.value for o in (Op.ADD, Op.SUB, Op.MUL, Op.SHL,
                                        Op.SHR, Op.CONST, Op.LIVEIN))
+# the homogeneous full FU op set (CGRAArch's default)
+FULL_OPS = frozenset(o.value for o in (ALU_OPS | MEM_OPS
+                                       | {Op.CONST, Op.LIVEIN}))
+# "mulring": interior tiles keep everything but the multiplier
+NOMUL_OPS = FULL_OPS - frozenset((Op.MUL.value,))
 
-HET_KINDS = ("none", "alulite")
+HET_KINDS = ("none", "alulite", "mulring", "checker")
 
 
 @dataclass(frozen=True)
@@ -109,10 +131,16 @@ class ArchPoint:
             clusters = [list(range(rows * cols))]
 
         per_pe_ops: Dict[int, frozenset] = {}
-        if self.het == "alulite":
+        if self.het != "none":
             boundary = set(left) | set(right)
-            per_pe_ops = {p: LITE_OPS for p in range(rows * cols)
-                          if p not in boundary}
+            interior = [p for p in range(rows * cols) if p not in boundary]
+            if self.het == "alulite":
+                per_pe_ops = {p: LITE_OPS for p in interior}
+            elif self.het == "mulring":
+                per_pe_ops = {p: NOMUL_OPS for p in interior}
+            else:  # checker
+                per_pe_ops = {p: LITE_OPS for p in interior
+                              if (p // cols + p % cols) % 2 == 1}
 
         arch = CGRAArch(name=self.name, rows=rows, cols=cols,
                         datapath_bits=16, regfile_size=self.regfile_size,
@@ -186,13 +214,130 @@ def full_space() -> List[ArchPoint]:
     return pts
 
 
-SPACE_NAMES = ("tiny", "small", "full")
+def wide_space() -> List[ArchPoint]:
+    """The widened search universe (~500 points): the ``full`` grid plus
+    a big-single-bank provisioning option (16 kB x 1 per column) and the
+    two heterogeneity kinds beyond ALU-lite (``mulring``, ``checker``).
+    Deliberately too large to sweep exhaustively in CI — the seeded
+    search driver (:mod:`repro.dse.search`) is how it gets explored.
+    ``full_space()`` is a strict subset (same validity rule, superset
+    axes), so exhaustive baselines stay comparable."""
+    pts: List[ArchPoint] = []
+    for rows, cols in ((2, 2), (2, 4), (4, 4), (4, 8), (6, 6), (8, 8)):
+        for torus in (False, True):
+            for rf in (4, 8, 16):
+                for bank_kb, bpc in ((8, 1), (4, 2), (8, 2), (16, 1)):
+                    for het in HET_KINDS:
+                        p = ArchPoint(rows, cols, torus=torus,
+                                      regfile_size=rf, bank_kb=bank_kb,
+                                      banks_per_col=bpc, het=het)
+                        if point_valid(p):
+                            pts.append(p)
+    return pts
+
+
+SPACE_NAMES = ("tiny", "small", "full", "wide")
 
 
 def get_space(name: str) -> List[ArchPoint]:
     try:
         return {"tiny": tiny_space, "small": small_space,
-                "full": full_space}[name]()
+                "full": full_space, "wide": wide_space}[name]()
     except KeyError:
         raise ValueError(f"unknown space {name!r} (choose from "
                          f"{SPACE_NAMES})") from None
+
+
+# -------------------------------------------------------- search operators
+# the knob axes a point decomposes into (grid and bank move as pairs: a
+# row count without its column count — or a bank size without its port
+# count — is not a meaningful half-gene)
+AXES = ("grid", "torus", "regfile_size", "bank", "het")
+
+
+def genes(p: ArchPoint) -> Dict[str, object]:
+    """Decompose a point into its knob genes, keyed by ``AXES``."""
+    return {"grid": (p.rows, p.cols), "torus": p.torus,
+            "regfile_size": p.regfile_size,
+            "bank": (p.bank_kb, p.banks_per_col), "het": p.het}
+
+
+def from_genes(g: Dict[str, object]) -> ArchPoint:
+    """Reassemble an :class:`ArchPoint` from a gene dict."""
+    rows, cols = g["grid"]
+    bank_kb, bpc = g["bank"]
+    return ArchPoint(rows, cols, torus=bool(g["torus"]),
+                     regfile_size=int(g["regfile_size"]),
+                     bank_kb=int(bank_kb), banks_per_col=int(bpc),
+                     het=str(g["het"]))
+
+
+def point_valid(p: ArchPoint) -> bool:
+    """Structural validity of a point — the same rules ``build()``
+    enforces, plus "heterogeneity needs interior PEs" (``cols > 2``),
+    which ``full_space``/``wide_space`` enumeration also applies.  Search
+    operators cross and mutate genes freely and discard what fails
+    here."""
+    if p.cols < 2 or p.rows < 1 or p.banks_per_col not in (1, 2):
+        return False
+    if p.banks_per_col == 2 and p.rows < 2:
+        return False
+    if p.het not in HET_KINDS:
+        return False
+    if p.het != "none" and p.cols <= 2:
+        return False
+    return True
+
+
+def axis_domains(points: Sequence[ArchPoint]) -> Dict[str, List]:
+    """Per-axis value domains spanned by a candidate universe, in
+    deterministic order — the gene pool the search operators draw from.
+    Crossing domain values can produce combinations absent from the
+    input list; that widening is intentional (``point_valid`` is the only
+    fence)."""
+    pts = list(points)
+    return {
+        "grid": sorted({(p.rows, p.cols) for p in pts}),
+        "torus": sorted({p.torus for p in pts}),
+        "regfile_size": sorted({p.regfile_size for p in pts}),
+        "bank": sorted({(p.bank_kb, p.banks_per_col) for p in pts}),
+        "het": sorted({p.het for p in pts}, key=HET_KINDS.index),
+    }
+
+
+def mutate(rng, p: ArchPoint, domains: Dict[str, List],
+           rate: float = 0.25) -> ArchPoint:
+    """Seeded point mutation: each knob independently resamples from its
+    domain with probability ``rate`` (at least one knob always moves);
+    invalid gene combinations redraw (bounded), falling back to the
+    parent.  Deterministic for a given ``rng`` state."""
+    for _ in range(8):
+        g = genes(p)
+        moved = False
+        for axis in AXES:
+            dom = domains.get(axis, [])
+            if len(dom) > 1 and rng.random() < rate:
+                g[axis] = dom[rng.randrange(len(dom))]
+                moved = True
+        if not moved:
+            movable = [ax for ax in AXES if len(domains.get(ax, [])) > 1]
+            if not movable:
+                return p
+            ax = movable[rng.randrange(len(movable))]
+            dom = domains[ax]
+            g[ax] = dom[rng.randrange(len(dom))]
+        q = from_genes(g)
+        if q != p and point_valid(q):
+            return q
+    return p
+
+
+def crossover(rng, a: ArchPoint, b: ArchPoint) -> ArchPoint:
+    """Seeded uniform crossover: each knob comes from either parent with
+    equal probability; an invalid child falls back to parent ``a``.
+    Deterministic for a given ``rng`` state."""
+    ga, gb = genes(a), genes(b)
+    g = {axis: (ga[axis] if rng.random() < 0.5 else gb[axis])
+         for axis in AXES}
+    q = from_genes(g)
+    return q if point_valid(q) else a

@@ -137,6 +137,11 @@ def test_verify_batch_reports_seed_on_mismatch(compiled_all):
 def test_bucket_batch_rounds_to_power_of_two():
     assert [simcache.bucket_batch(b) for b in (0, 1, 2, 3, 5, 8, 9)] == \
         [1, 1, 2, 4, 8, 8, 16]
+    # degenerate and negative inputs clamp to the 1-bucket, and exact
+    # powers of two are fixed points (no gratuitous doubling)
+    assert simcache.bucket_batch(-3) == 1
+    for p in (1, 2, 4, 64, 1024):
+        assert simcache.bucket_batch(p) == p
 
 
 def test_bucket_cycles_rounds_up_with_bounded_padding():
@@ -146,6 +151,41 @@ def test_bucket_cycles_rounds_up_with_bounded_padding():
         assert b <= max(n * 1.125, n + 1), (n, b)
     # buckets quantize: nearby cycle counts share one boundary
     assert simcache.bucket_cycles(121) == simcache.bucket_cycles(127)
+
+
+def test_bucket_cycles_edges():
+    # <= 8 passes through exactly (tiny schedules never pad) except the
+    # degenerate 0/negative, which clamps to 1 cycle
+    assert [simcache.bucket_cycles(n) for n in (0, -1, 1, 2, 8)] == \
+        [1, 1, 1, 2, 8]
+    # the first bucketed value and an exact boundary stay put
+    assert simcache.bucket_cycles(9) == 9
+    assert simcache.bucket_cycles(16) == 16
+    # idempotent: a bucket boundary is its own bucket
+    for n in (9, 17, 40, 121, 12345):
+        assert simcache.bucket_cycles(simcache.bucket_cycles(n)) == \
+            simcache.bucket_cycles(n)
+
+
+def test_bucket_rows_quantizes_like_cycles():
+    # the stacked-batch row bucket uses the cycle quantization (<= 12.5%
+    # padded rows), not bucket_batch's power of two: 40 rows must not
+    # balloon to 64
+    assert simcache.bucket_rows(40) == 40
+    assert simcache.bucket_rows(41) < simcache.bucket_batch(41)
+    for n in (1, 8, 9, 38, 100):
+        assert simcache.bucket_rows(n) == simcache.bucket_cycles(n)
+
+
+def test_bucket_rf_merges_provisioning_classes():
+    # every library register-file size folds into the 16-wide class, so
+    # rf4/rf8/rf16 search variants share one stacked executable
+    assert {simcache.bucket_rf(rf) for rf in (1, 4, 8, 16)} == {16}
+    # wider RFs round to the next power of two and are fixed points
+    assert simcache.bucket_rf(17) == 32
+    assert simcache.bucket_rf(32) == 32
+    for rf in (1, 4, 16, 24, 64):
+        assert simcache.bucket_rf(rf) >= rf
 
 
 def test_executable_cache_reuses_signatures(compiled_all):

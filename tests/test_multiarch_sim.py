@@ -1,0 +1,161 @@
+"""Multi-architecture stacked simulation: the bit-exactness contract of
+``simulate_multi`` / ``verify_stacked`` against the per-config batched
+path, across configs that differ in register-file provisioning and
+memory footprint, plus the shape-bucket guards.
+
+The load-bearing property: per (config, seed) element, stacking many
+fabrics' configuration planes into one XLA launch must reproduce
+``simulate_batch`` on that config alone word-for-word — including the
+RF-bucketed groups where a 4-register fabric runs inside a 16-register
+executable on dead padded lanes."""
+import numpy as np
+import pytest
+
+from repro.core import simcache
+from repro.core.simulator import (simulate_batch, simulate_multi,
+                                  stack_signature)
+from repro.core.toolchain import Toolchain, verify_stacked
+from repro.dse import ArchPoint, kernel_suite
+
+SEEDS = [0, 1, 7]
+
+# rf4 / rf8 / rf16 variants of the same 4x4 fabric: distinct SimConfigs
+# (and distinct exact-shape executables) that bucket_rf folds into one
+# stacked shape class
+RF_POINTS = [ArchPoint(rows=4, cols=4, torus=False, regfile_size=rf,
+                       bank_kb=4, banks_per_col=2, het="none")
+             for rf in (4, 8, 16)]
+
+
+@pytest.fixture(scope="module")
+def rf_cohort():
+    """{kernel: [CompiledKernel per RF variant]} for two cheap kernels."""
+    tc = Toolchain(cache_dir="")
+    out = {}
+    for name in ("dwconv", "requant-int8"):
+        out[name] = [tc.compile(kernel_suite(p.build())[name])
+                     for p in RF_POINTS]
+    return out
+
+
+def _init_batch(ck, seeds):
+    from repro.core.toolchain import _batch_oracle
+    init, _ = _batch_oracle(ck, seeds, check_dfg=False)
+    return init
+
+
+def test_mixed_rf_variants_share_one_stack_signature(rf_cohort):
+    """bucket_rf is what lets a search cohort share executables across
+    its register-file axis: all three RF variants of a kernel land in
+    one shape bucket, with the bucketed RF (not any config's own) in
+    the signature."""
+    for name, cks in rf_cohort.items():
+        sigs = {stack_signature(ck.cfg, ck.mapped_iters,
+                                len(ck.invocations)) for ck in cks}
+        assert len(sigs) == 1, (name, sigs)
+        assert sigs.pop()[2] == simcache.bucket_rf(16) == 16
+
+
+def test_stacked_matches_per_config_word_for_word(rf_cohort):
+    """Golden equivalence of the stacked launch: every (config, seed)
+    element equals simulate_batch on that config alone — the rf4 and
+    rf8 rows run with padded dead registers inside the rf16-wide
+    executable."""
+    for name, cks in rf_cohort.items():
+        items, want = [], []
+        for ck in cks:
+            init = _init_batch(ck, SEEDS)
+            items.append((ck.cfg, [dict(b) for b in init], ck.invocations))
+            want.append(simulate_batch(ck.cfg, [dict(b) for b in init],
+                                       ck.invocations, ck.mapped_iters))
+        got = simulate_multi(items, n_iters=cks[0].mapped_iters)
+        for ck, w, g in zip(cks, want, got):
+            assert len(g) == len(SEEDS)
+            for seed, wb, gb in zip(SEEDS, w, g):
+                for bank in wb:
+                    np.testing.assert_array_equal(
+                        wb[bank], gb[bank],
+                        err_msg=f"{name} {ck.arch.name} seed {seed} {bank}")
+
+
+def test_stacked_pads_memory_to_widest_image(rf_cohort):
+    """Configs with different total_words stack fine: memory rows pad to
+    the group's widest image and each config addresses only its own
+    words (the 2 KB-bank fabric rides rows sized for the 4 KB one).
+    Per-item seed batches of different sizes stack too."""
+    tc = Toolchain(cache_dir="")
+    kb2 = ArchPoint(rows=4, cols=4, torus=False, regfile_size=16,
+                    bank_kb=2, banks_per_col=2, het="none")
+    narrow = tc.compile(kernel_suite(kb2.build())["requant-int8"])
+    wide = rf_cohort["requant-int8"][2]
+    assert narrow.cfg.total_words < wide.cfg.total_words
+    assert (stack_signature(narrow.cfg, narrow.mapped_iters,
+                            len(narrow.invocations))
+            == stack_signature(wide.cfg, wide.mapped_iters,
+                               len(wide.invocations)))
+    cks, batches = [narrow, wide], [SEEDS[:1], SEEDS]
+    items = [(ck.cfg, _init_batch(ck, s), ck.invocations)
+             for ck, s in zip(cks, batches)]
+    got = simulate_multi(items, n_iters=narrow.mapped_iters)
+    for ck, s, g in zip(cks, batches, got):
+        want = simulate_batch(ck.cfg, _init_batch(ck, s),
+                              ck.invocations, ck.mapped_iters)
+        assert len(g) == len(s)
+        for wb, gb in zip(want, g):
+            for bank in wb:
+                np.testing.assert_array_equal(wb[bank], gb[bank])
+
+
+def test_mismatched_signatures_are_rejected(rf_cohort):
+    """Stacking configs from different shape buckets is a caller bug and
+    must fail loudly, not mis-simulate."""
+    a = rf_cohort["dwconv"][0]
+    b = rf_cohort["requant-int8"][0]
+    sig_a = stack_signature(a.cfg, a.mapped_iters, len(a.invocations))
+    sig_b = stack_signature(b.cfg, b.mapped_iters, len(b.invocations))
+    assert sig_a != sig_b
+    with pytest.raises(ValueError, match="shape buckets"):
+        simulate_multi(
+            [(a.cfg, _init_batch(a, [0]), a.invocations),
+             (b.cfg, _init_batch(b, [0]), b.invocations)],
+            n_iters=a.mapped_iters)
+
+
+def test_empty_and_singleton_groups(rf_cohort):
+    """Items with no seed batch contribute empty results; a group of one
+    degrades to the plain batched path."""
+    ck = rf_cohort["dwconv"][0]
+    out = simulate_multi([(ck.cfg, [], ck.invocations)],
+                         n_iters=ck.mapped_iters)
+    assert out == [[]]
+    init = _init_batch(ck, SEEDS)
+    got = simulate_multi([(ck.cfg, [dict(b) for b in init],
+                           ck.invocations)], n_iters=ck.mapped_iters)
+    want = simulate_batch(ck.cfg, [dict(b) for b in init],
+                          ck.invocations, ck.mapped_iters)
+    for wb, gb in zip(want, got[0]):
+        for bank in wb:
+            np.testing.assert_array_equal(wb[bank], gb[bank])
+
+
+def test_verify_stacked_passes_and_catches_corruption(rf_cohort):
+    """verify_stacked is verify_batch's contract at fewer launches: the
+    clean cohort passes, and a corrupted configuration inside a stacked
+    group still fails with the offending seed named."""
+    cks = rf_cohort["dwconv"]
+    assert verify_stacked(cks, seeds=SEEDS) == cks
+
+    from repro.core.toolchain import CompiledKernel
+    bad = CompiledKernel.from_json(cks[1].to_json())
+    bad.cfg.imm[:] = bad.cfg.imm + 1        # corrupt every immediate
+    with pytest.raises(AssertionError, match="seed="):
+        verify_stacked([cks[0], bad, cks[2]], seeds=SEEDS[:2])
+
+
+def test_verify_many_stacked_flag(rf_cohort):
+    """Toolchain.verify_many(stacked=True) routes through verify_stacked
+    and returns the kernels in input order."""
+    tc = Toolchain(cache_dir="")
+    cks = rf_cohort["requant-int8"]
+    out = tc.verify_many(list(cks), seeds=[0, 1], stacked=True)
+    assert out == list(cks)

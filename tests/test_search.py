@@ -1,0 +1,164 @@
+"""Seeded multi-objective DSE search (repro.dse.search): determinism of
+the whole trajectory, checkpoint-resume replay, halving rung fidelity,
+input validation, and the widened search space operators.
+
+The load-bearing property mirrors the sweep's: a search is a pure
+function of (universe, SearchConfig, seeds, verify, suite) — cold, warm
+and checkpoint-resumed runs must produce identical results, and the CI
+``search-smoke`` job extends this to byte-identical artifacts."""
+import json
+
+import pytest
+
+from repro.core.mapper import MapperOptions
+from repro.core.toolchain import Toolchain
+from repro.dse import (HET_KINDS, SEARCH_ALGOS, SearchConfig, axis_domains,
+                       crossover, get_space, mutate, run_search, wide_space,
+                       write_artifacts)
+from repro.dse.space import from_genes, genes, point_valid
+
+SUITE = ["requant-int8"]          # 1-kernel suite: cheap, fully exercised
+CFG = SearchConfig(algo="nsga2", seed=3, generations=2, population=3)
+
+
+@pytest.fixture(scope="module")
+def toolchain():
+    """One in-memory toolchain for every search in this module: repeat
+    runs replay from the compile memo, so determinism tests are cheap."""
+    return Toolchain(options=MapperOptions(ii_max=20), cache_dir="")
+
+
+def _snapshot(sr):
+    """Everything a search run decides, as plain data."""
+    return {"evaluated": [r.to_json_dict() for r in sr.evaluated],
+            "population": sr.population, "history": sr.history}
+
+
+def test_nsga2_runs_are_identical(toolchain):
+    universe = get_space("tiny")
+    a = run_search(universe, CFG, toolchain=toolchain, suite=SUITE)
+    b = run_search(universe, CFG, toolchain=toolchain, suite=SUITE)
+    assert _snapshot(a) == _snapshot(b)
+    assert a.n_requested == b.n_requested
+    # the trajectory really searched: both generations evaluated points,
+    # and every full-fidelity evaluation is on the result list
+    assert len(a.history) == CFG.generations
+    assert a.population
+    assert {r.name for r in a.evaluated} >= set(a.population)
+    assert a.n_partial == 0           # nsga2 is always full fidelity
+
+
+def test_search_seed_changes_the_trajectory(toolchain):
+    universe = get_space("tiny")
+    a = run_search(universe, CFG, toolchain=toolchain, suite=SUITE)
+    b = run_search(universe, SearchConfig(algo="nsga2", seed=4,
+                                          generations=2, population=3),
+                   toolchain=toolchain, suite=SUITE)
+    # different seeds sample/mutate differently (tiny universe still
+    # leaves room via offspring knob recombination)
+    assert a.history != b.history
+
+
+def test_resumed_search_equals_cold_run(tmp_path, toolchain):
+    """A checkpoint from a shorter run is a valid prefix: resuming a
+    2-generation search from the 1-generation ledger replays generation
+    one from the ledger and lands on the cold run's exact result."""
+    universe = get_space("tiny")
+    ckpt = str(tmp_path / "search_ckpt.json")
+    short = SearchConfig(algo="nsga2", seed=3, generations=1, population=3)
+    run_search(universe, short, toolchain=toolchain, suite=SUITE,
+               checkpoint=ckpt)
+    cold = run_search(universe, CFG, toolchain=toolchain, suite=SUITE)
+    resumed = run_search(universe, CFG, toolchain=toolchain, suite=SUITE,
+                         checkpoint=ckpt)
+    assert _snapshot(resumed) == _snapshot(cold)
+
+
+def test_halving_rungs_grow_fidelity(toolchain):
+    """Successive halving: candidate counts shrink by eta per rung while
+    the kernel-prefix fidelity grows, and only the final full-fidelity
+    rung publishes results."""
+    universe = get_space("tiny")
+    cfg = SearchConfig(algo="halving", seed=1, generations=2,
+                       population=2, eta=2)
+    a = run_search(universe, cfg, toolchain=toolchain,
+                   suite=["requant-int8", "dwconv"])
+    b = run_search(universe, cfg, toolchain=toolchain,
+                   suite=["requant-int8", "dwconv"])
+    assert _snapshot(a) == _snapshot(b)
+    assert [h["fidelity"] for h in a.history] == [1, 2]
+    sizes = [len(h["evaluated"]) for h in a.history]
+    assert sizes[0] == 4 and sizes[1] == 2     # population * eta, halved
+    assert a.n_partial == 4                    # rung-1 evals are partial
+    # partial rungs never leak into the published results
+    assert len(a.evaluated) == 2
+    assert all(len(r.kernels) == 2 for r in a.evaluated)
+
+
+def test_search_input_validation(toolchain):
+    universe = get_space("tiny")
+    with pytest.raises(ValueError, match="unknown search algo"):
+        run_search(universe, SearchConfig(algo="annealing"))
+    with pytest.raises(ValueError, match="population"):
+        run_search(universe, SearchConfig(population=1))
+    with pytest.raises(ValueError, match="generations"):
+        run_search(universe, SearchConfig(generations=0))
+    with pytest.raises(ValueError, match="eta"):
+        run_search(universe, SearchConfig(algo="halving", eta=1))
+    with pytest.raises(ValueError, match="empty candidate universe"):
+        run_search([], CFG)
+    with pytest.raises(ValueError, match="unknown suite kernel"):
+        run_search(universe, CFG, suite=["CONV2D"])
+    with pytest.raises(ValueError, match="at least one seed"):
+        run_search(universe, CFG, seeds=[])
+    with pytest.raises(ValueError, match="options conflicts"):
+        run_search(universe, CFG, toolchain=toolchain,
+                   options=MapperOptions(ii_max=4))
+
+
+def test_search_artifacts_carry_the_trajectory(tmp_path, toolchain):
+    """write_artifacts(bench_name='dse_search', extra=...) produces the
+    search-mode artifact pair the CLI and CI rely on."""
+    universe = get_space("tiny")
+    sr = run_search(universe, CFG, toolchain=toolchain, suite=SUITE)
+    extra = {"search": {"config": CFG.to_json_dict(),
+                        "population": sr.population,
+                        "history": sr.history}}
+    paths = write_artifacts(sr.evaluated, str(tmp_path), space="tiny",
+                            bench_name="dse_search", extra=extra)
+    report = json.loads((tmp_path / "dse_frontier.json").read_text())
+    assert report["search"]["config"]["algo"] == "nsga2"
+    assert report["search"]["population"] == sr.population
+    bench = json.loads((tmp_path / "BENCH_dse_search.json").read_text())
+    assert bench["bench"] == "dse_search"
+    assert "BENCH_dse_search.json" in paths
+
+
+# ------------------------------------------------------- widened space
+def test_wide_space_is_deterministic_and_heterogeneous():
+    pts = wide_space()
+    assert pts == wide_space()
+    names = [p.name for p in pts]
+    assert len(names) == len(set(names))
+    assert len(pts) > len(get_space("full"))
+    assert {p.het for p in pts} == set(HET_KINDS)
+    assert get_space("wide") == pts
+
+
+def test_genes_roundtrip_and_operators_are_seeded():
+    import random
+    pts = get_space("wide")
+    for p in pts[::97]:
+        assert from_genes(genes(p)) == p
+        assert point_valid(p)
+    domains = axis_domains(pts)
+    assert set(HET_KINDS) == set(domains["het"])
+    a, b = pts[0], pts[-1]
+    r1, r2 = random.Random(7), random.Random(7)
+    assert crossover(r1, a, b) == crossover(r2, a, b)
+    m1 = mutate(random.Random(5), a, domains, 0.5)
+    m2 = mutate(random.Random(5), a, domains, 0.5)
+    assert m1 == m2 and point_valid(m1)
+    # mutation at probability 1 with a fresh rng actually moves knobs
+    assert any(mutate(random.Random(s), a, domains, 1.0) != a
+               for s in range(5))

@@ -76,14 +76,21 @@ def test_tile_budget_counts_every_plane_element(tc):
     footprint — every plane's inner dims and narrowed item size — not the
     bare P-words-per-cycle estimate that undercounted wide planes like
     the [P,3+RF+4] mux bank several-fold."""
+    import jax.numpy as jnp
+
     from repro.core.simulator import (_SLOT_PLANES, _as_jnp,
                                       _tile_bytes_per_cycle)
     cfg = tc.compile(build_gemm(TI=4, TK=4, TJ=4, unroll=1)).cfg
     planes = _as_jnp(cfg)
-    per_cycle = _tile_bytes_per_cycle(planes)
+    per_cycle = _tile_bytes_per_cycle(planes, cfg.II)
     manual = sum(int(np.prod(planes[k].shape[1:])) * planes[k].dtype.itemsize
                  for k in _SLOT_PLANES)
     assert per_cycle == manual
+    # config-batched planes ([B,II,...]) stream every batch row per
+    # cycle: the same accounting scales linearly with B
+    stacked = {k: jnp.repeat(v[None], 3, axis=0)
+               for k, v in planes.items()}
+    assert _tile_bytes_per_cycle(stacked, cfg.II) == 3 * per_cycle
     # the mux-port plane alone is [P, 3+RF+4] — wider than the old
     # one-word-per-PE accounting by an order of magnitude
     assert per_cycle >= cfg.P * (3 + cfg.RF + 4)
