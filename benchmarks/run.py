@@ -17,6 +17,8 @@
   dse_search      -- cross-architecture stacked simulation (simulate_multi)
                      vs one launch per (variant, kernel): evaluated points
                      per second, the DSE search evaluator's perf core
+  check_static    -- static legality audit (repro.check) throughput over
+                     the kernel library, vs one batch-1 dynamic verify
 
 Each benchmark prints ``name,us_per_call,derived`` CSV rows *and* returns
 machine-readable rows; ``main`` writes one ``BENCH_<name>.json`` artifact
@@ -470,6 +472,45 @@ def bench_isa_export() -> List[Dict]:
     return rows
 
 
+def bench_check_static() -> List[Dict]:
+    """Static legality audit throughput (repro.check) over the Table-I
+    (small dims) + DSL kernel set: all three layers (mapping, config,
+    re-derived instruction stream) per kernel, best of 3.  The derived
+    ``verify_us`` column is one batch-1 dynamic verify over the same set
+    — the cost the MORPHER_CHECK=1 pre-screen lets a fleet skip for
+    artifacts that are corrupt on paper."""
+    from repro.check import check_kernel, errors
+    from repro.core.kernels_lib import table1_kernels
+    from repro.core.toolchain import Toolchain
+    from repro.frontend.library import dsl_kernels
+
+    specs = {**table1_kernels(small=True), **dsl_kernels()}
+    cks = Toolchain(cache_dir="").compile_many(list(specs.values()))
+    for ck in cks:                       # warm: imports + one XLA trace each
+        assert not errors(check_kernel(ck))
+        ck.verify(seed=0)
+
+    chk = float("inf")                   # best of 3: shields against noise
+    for _ in range(3):
+        t0 = time.time()
+        n_diags = sum(len(check_kernel(ck)) for ck in cks)
+        chk = min(chk, time.time() - t0)
+    ver = float("inf")
+    for _ in range(3):
+        t0 = time.time()
+        for ck in cks:
+            ck.verify(seed=0)
+        ver = min(ver, time.time() - t0)
+
+    rows = [_row("check_static", chk * 1e6, kernels=len(cks),
+                 diagnostics=n_diags,
+                 kernels_per_s=round(len(cks) / chk, 1),
+                 verify_us=round(ver * 1e6),
+                 verify_ratio=round(ver / chk, 1))]
+    _print_rows(rows)
+    return rows
+
+
 def bench_serve_decode() -> List[Dict]:
     """End-to-end CGRA-backed serving on shrunken configs: build a
     ServePlan (feasible tiles, compile_many, one site spot-checked
@@ -532,6 +573,8 @@ BENCHES = {
                      bench_serve_decode),
     "isa_export": ("instruction-stream export + interpreter xval",
                    bench_isa_export),
+    "check_static": ("static legality audit throughput (repro.check)",
+                     bench_check_static),
 }
 
 

@@ -174,12 +174,31 @@ class CGRAArch:
         if self.rows <= 0 or self.cols <= 0:
             raise ValueError(f"{self.name}: grid {self.rows}x{self.cols} "
                              f"must be positive")
+        if self.torus and (self.rows < 2 or self.cols < 2):
+            # a 1-wide torus wraps a PE's N/S (or E/W) wires back onto
+            # itself: neighbor() would return the PE as its own neighbour,
+            # an out-of-range reference the router cannot represent (today
+            # this only surfaces deep in config generation)
+            raise ValueError(f"{self.name}: torus grid {self.rows}x"
+                             f"{self.cols} wraps a PE onto itself; tori "
+                             f"need rows >= 2 and cols >= 2")
         seen_ids: set = set()
         for b in self.banks:
             if b.id in seen_ids:
                 raise ValueError(f"{self.name}: duplicate memory bank id "
                                  f"{b.id}")
             seen_ids.add(b.id)
+            if b.size_bytes <= 0 or b.size_bytes % 2:
+                # a zero/odd-sized bank collapses to 0 words: its derived
+                # word interval is empty and its global offset aliases the
+                # next bank's in every SimConfig built on this arch
+                raise ValueError(f"{self.name}: bank {b.id} size_bytes "
+                                 f"{b.size_bytes} must be a positive "
+                                 f"multiple of 2 (16-bit words), else its "
+                                 f"word offsets overlap the next bank's")
+            if len(set(b.pes)) != len(b.pes):
+                raise ValueError(f"{self.name}: bank {b.id} lists a PE "
+                                 f"more than once on its bus: {b.pes}")
             for p in b.pes:
                 if not 0 <= p < self.n_pes:
                     raise ValueError(f"{self.name}: bank {b.id} references "

@@ -230,7 +230,8 @@ def generate_config(mapping: Mapping, layout: DataLayout) -> SimConfig:
             ridx = mapping.reg_assign.get((pe, route.value, t))
             if ridx is None:
                 raise ConfigConflict(
-                    f"no register for value {route.value} at pe{pe} t{t}")
+                    f"slot{t % II}/pe{pe}: no register for value "
+                    f"{route.value} at t{t} (rule MAP-REG-RANGE)")
             return KIND_REG, ridx
         # fresh: either straight off the producing FU, or an inbound wire
         if step_i == 0:
@@ -243,7 +244,9 @@ def generate_config(mapping: Mapping, layout: DataLayout) -> SimConfig:
         for d in DIRS:
             if arch.neighbor(pe, d) == ppe:
                 return KIND_IN[d], 0
-        raise ConfigConflict(f"pe{ppe} is not adjacent to pe{pe}")
+        raise ConfigConflict(
+            f"slot{t % II}/pe{pe}: inbound value {route.value} from pe{ppe}, "
+            f"which is not adjacent (rule MAP-ROUTE-ADJ)")
 
     def set_xo(pe: int, d: int, slot: int, kind: int, idx: int,
                owner: Tuple[int, int]) -> None:
@@ -251,7 +254,10 @@ def generate_config(mapping: Mapping, layout: DataLayout) -> SimConfig:
         if cell in xo_owner:
             if xo_owner[cell] == owner:
                 return
-            raise ConfigConflict(f"xo conflict at {cell}")
+            raise ConfigConflict(
+                f"slot{slot}/pe{pe}: xo_{DIRS[d].lower()} crossbar port "
+                f"double-driven, xo conflict at {cell} "
+                f"(rule MAP-ROUTE-OVERLAP)")
         xo_owner[cell] = owner
         xo_kind[slot, pe, d] = kind
         xo_idx[slot, pe, d] = idx
@@ -262,7 +268,9 @@ def generate_config(mapping: Mapping, layout: DataLayout) -> SimConfig:
         if cell in rf_owner:
             if rf_owner[cell] == owner:
                 return
-            raise ConfigConflict(f"rf write conflict at {cell}")
+            raise ConfigConflict(
+                f"slot{slot}/pe{pe}: rf{r} writeback double-driven, rf "
+                f"write conflict at {cell} (rule MAP-ROUTE-OVERLAP)")
         rf_owner[cell] = owner
         rf_kind[slot, pe, r] = kind
         rf_idx[slot, pe, r] = idx
@@ -297,7 +305,8 @@ def generate_config(mapping: Mapping, layout: DataLayout) -> SimConfig:
         cur_k = src_kind[dslot, dpe, oslot]
         if cur_k != KIND_NONE and (cur_k, src_idx[dslot, dpe, oslot]) != (kind, idx):
             raise ConfigConflict(
-                f"operand mux conflict node {dst} port {oslot}")
+                f"slot{dslot}/pe{dpe}: operand mux conflict node {dst} "
+                f"port {oslot} (rule MAP-ROUTE-OVERLAP)")
         src_kind[dslot, dpe, oslot] = kind
         src_idx[dslot, dpe, oslot] = idx
         # loop-carried init forcing (host-preloaded prologue values)
@@ -315,7 +324,11 @@ def generate_config(mapping: Mapping, layout: DataLayout) -> SimConfig:
                 kk, ii_ = resolve(route, i)
                 set_xo(p0, DIR_IDX[d], t0 % II, kk, ii_, owner)
             elif k1 == R and k0 == F:  # RF write
-                ridx = mapping.reg_assign[(p0, route.value, t1)]
+                ridx = mapping.reg_assign.get((p0, route.value, t1))
+                if ridx is None:
+                    raise ConfigConflict(
+                        f"slot{t1 % II}/pe{p0}: no register for value "
+                        f"{route.value} at t{t1} (rule MAP-REG-RANGE)")
                 kk, ii_ = resolve(route, i)
                 set_rf(p0, ridx, t0 % II, kk, ii_, owner)
             # R->R same pe: value stays put, no config needed

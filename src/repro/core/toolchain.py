@@ -210,6 +210,12 @@ class CompiledKernel:
         reference execution on deterministic random bank images — the same
         bit-exact contract, self-contained in the artifact.
         """
+        from .verify import check_enabled
+        if check_enabled():
+            # opt-in static gate (MORPHER_CHECK=1): a clean artifact must
+            # be diagnostic-free before any simulation runs
+            from ..check import assert_clean
+            assert_clean(self)
         if self.spec is not None:
             from .verify import check_dfg_semantics, generate_test_data
             data = generate_test_data(self.spec, seed)
@@ -260,6 +266,10 @@ class CompiledKernel:
         seeds = list(seeds)
         if not seeds:
             return self
+        from .verify import check_enabled
+        if check_enabled():
+            from ..check import assert_clean
+            assert_clean(self)
         init_batch, expected = _batch_oracle(self, seeds, check_dfg)
         finals = self.run_batch(init_batch)
         _check_batch(self, seeds, init_batch, expected, finals)
@@ -376,6 +386,11 @@ def verify_stacked(kernels: Sequence[CompiledKernel],
     seeds = list(seeds)
     if not seeds or not kernels:
         return kernels
+    from .verify import check_enabled
+    if check_enabled():
+        from ..check import assert_clean
+        for ck in kernels:
+            assert_clean(ck)
     groups: Dict[tuple, List[int]] = {}
     for idx, ck in enumerate(kernels):
         sig = stack_signature(ck.cfg, ck.mapped_iters,
@@ -787,6 +802,18 @@ class Toolchain:
         from ..isa.xval import cross_validate
         cross_validate(ck, seeds=seeds)
         return ck
+
+    def check(self, kernel, options: Optional[MapperOptions] = None):
+        """Static legality audit (``repro.check``): run the mapping, config
+        and instruction-stream checkers over one kernel without simulating
+        it.  ``kernel`` may be a :class:`CompiledKernel`, a spec, or an
+        arch-deferred frontend program (compiled here first).  Returns the
+        list of :class:`~repro.check.Diagnostic` records — empty for a
+        clean artifact (the ``MORPHER_CHECK=1`` contract)."""
+        ck = (kernel if isinstance(kernel, CompiledKernel)
+              else self.compile(kernel, options))
+        from ..check import check_kernel
+        return check_kernel(ck)
 
     def verify_many(self, kernels: Iterable, seeds: Sequence[int] = (0,),
                     check_dfg: bool = True,

@@ -41,6 +41,15 @@ def xval_enabled() -> bool:
     return os.environ.get("MORPHER_XVAL", "") == "1"
 
 
+def check_enabled() -> bool:
+    """Opt-in static gate: ``MORPHER_CHECK=1`` runs the ``repro.check``
+    static legality checker at the top of every verify (and as a DSE
+    pre-screen).  Clean compiled artifacts must be diagnostic-free — the
+    PR-10 contract — so under this gate a verify additionally certifies
+    the artifact's structural/temporal legality without extra simulation."""
+    return os.environ.get("MORPHER_CHECK", "") == "1"
+
+
 @dataclass
 class TestData:
     init_banks: Dict[str, np.ndarray]

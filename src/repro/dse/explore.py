@@ -240,9 +240,32 @@ def _kernel_outcome(kname: str, spec, ck, status: str,
         from_cache=ck.from_cache, cache_key=ck.cache_key, error=err)
 
 
+def _static_check_wanted(static_check: Optional[bool]) -> bool:
+    """DSE pre-screen opt-in: explicit argument wins, otherwise follow the
+    MORPHER_CHECK=1 environment gate (so a checked CI run statically
+    pre-screens every evaluated point at no configuration cost)."""
+    if static_check is not None:
+        return static_check
+    from ..core.verify import check_enabled
+    return check_enabled()
+
+
+def _prescreen(ck) -> str:
+    """Static legality pre-screen for one mapped point; returns the empty
+    string when clean, else a summary of the first few diagnostics."""
+    from ..check import check_kernel, errors
+    found = errors(check_kernel(ck))
+    if not found:
+        return ""
+    head = "; ".join(str(d) for d in found[:3])
+    more = "" if len(found) <= 3 else f" (+{len(found) - 3} more)"
+    return f"{len(found)} static diagnostic(s): {head}{more}"
+
+
 def _score_variant(point: ArchPoint, arch: CGRAArch, tc: Toolchain,
                    seeds: Sequence[int], jobs: Optional[int],
-                   verify: bool, fleet=None) -> VariantResult:
+                   verify: bool, fleet=None,
+                   static_check: Optional[bool] = None) -> VariantResult:
     # clusters is descriptive metadata here, NOT a cost divisor: the
     # mapper schedules each kernel across the variant's whole fabric
     # (one configured instance), so modeling extra data-parallel copies
@@ -264,6 +287,7 @@ def _score_variant(point: ArchPoint, arch: CGRAArch, tc: Toolchain,
         return result
 
     names = list(SUITE_KERNELS)
+    do_check = _static_check_wanted(static_check)
     cks = tc.compile_many([suite[k] for k in names], jobs=jobs,
                           allow_unmapped=True, fleet=fleet)
     for kname, ck in zip(names, cks):
@@ -274,7 +298,11 @@ def _score_variant(point: ArchPoint, arch: CGRAArch, tc: Toolchain,
                 kernel=kname, status="map_error", error=reason)
             continue
         status, err = "ok", ""
-        if verify:
+        if do_check:
+            bad = _prescreen(ck)
+            if bad:
+                status, err = "check_error", bad
+        if verify and status == "ok":
             try:
                 ck.verify_batch(seeds)
             except AssertionError as e:
@@ -291,7 +319,9 @@ def evaluate_points(points: Sequence[ArchPoint], *,
                     verify: bool = True,
                     check_dfg: bool = True,
                     suite_names: Optional[Sequence[str]] = None,
-                    fleet=None) -> List[VariantResult]:
+                    fleet=None,
+                    static_check: Optional[bool] = None
+                    ) -> List[VariantResult]:
     """Score a whole population of variants in one batched pass — the
     search driver's evaluator and the throughput path the
     ``dse_search`` benchmark measures.
@@ -356,6 +386,21 @@ def evaluate_points(points: Sequence[ArchPoint], *,
         else:
             mapped.append((vi, kname, spec, ck))
 
+    if _static_check_wanted(static_check) and mapped:
+        # statically pre-screen every mapped point: flagged artifacts are
+        # scored as check_error and never reach the (much more expensive)
+        # stacked simulation — clean artifacts are unaffected, so frontier
+        # bytes are unchanged when nothing fires
+        screened: List[tuple] = []
+        for vi, kname, spec, ck in mapped:
+            bad = _prescreen(ck)
+            if bad:
+                results[vi].kernels[kname] = _kernel_outcome(
+                    kname, spec, ck, "check_error", bad)
+            else:
+                screened.append((vi, kname, spec, ck))
+        mapped = screened
+
     statuses: Dict[tuple, tuple] = {}
     if verify and mapped and len(seeds):
         try:
@@ -391,6 +436,7 @@ def run_sweep(points: Sequence[ArchPoint], *,
               workers: Optional[int] = None,
               faults=None,
               fleet=None,
+              static_check: Optional[bool] = None,
               log: Optional[Callable[[str], None]] = None
               ) -> List[VariantResult]:
     """Sweep the kernel library across ``points``; returns one
@@ -464,7 +510,7 @@ def run_sweep(points: Sequence[ArchPoint], *,
             say(f"[{i + 1}/{len(points)}] {point.name}: invalid ({e})")
             continue
         vr = _score_variant(point, arch, tc, seeds, jobs, verify,
-                            fleet=fleet)
+                            fleet=fleet, static_check=static_check)
         done[point.name] = vr
         results.append(vr)
         report = tc.last_fleet_report

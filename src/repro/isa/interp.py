@@ -58,7 +58,8 @@ def _parse_sel(text: str) -> Tuple[str, int]:
     """'reg3' -> ('reg', 3); 'in_n' -> ('in_n', 0); 'none' -> ('none', 0)."""
     m = _SEL_RE.match(text)
     if not m:
-        raise StreamError(f"unparseable mux select {text!r}")
+        raise StreamError(f"unparseable mux select {text!r} "
+                          f"(rule STR-SEL-RANGE)")
     kind, idx = m.group(1), m.group(2)
     return kind, int(idx) if idx else 0
 
@@ -102,7 +103,7 @@ def parse_stream(csv_text: str, manifest: dict) -> InstructionStream:
     """Decode the CSV against its manifest into an executable stream."""
     if manifest.get("stream_format") != STREAM_FORMAT:
         raise StreamError(f"stream_format {manifest.get('stream_format')} "
-                          f"!= {STREAM_FORMAT}")
+                          f"!= {STREAM_FORMAT} (rule STR-PARSE)")
     II, P, RF = manifest["II"], manifest["P"], manifest["RF"]
     LI = max(1, manifest["LI"])
     lines = csv_text.split("\n")
@@ -110,22 +111,26 @@ def parse_stream(csv_text: str, manifest: dict) -> InstructionStream:
         lines.pop()                              # trailing newline
     header = lines[0].split(",")
     if header != manifest["columns"]:
-        raise StreamError("CSV header does not match manifest columns")
+        raise StreamError("CSV header does not match manifest columns "
+                          "(rule STR-PARSE)")
     col = {c: i for i, c in enumerate(header)}
     if len(lines) - 1 != II * P:
-        raise StreamError(f"expected {II * P} records, got {len(lines) - 1}")
+        raise StreamError(f"expected {II * P} records, got {len(lines) - 1} "
+                          f"(rule STR-PARSE)")
 
     slots: List[List[Insn]] = [[] for _ in range(II)]
     seen = set()
     for ln in lines[1:]:
         v = ln.split(",")
         if len(v) != len(header):
-            raise StreamError(f"short record: {ln!r}")
+            raise StreamError(f"short record: {ln!r} (rule STR-PARSE)")
         slot, pe = int(v[col["slot"]]), int(v[col["pe"]])
         if not (0 <= slot < II and 0 <= pe < P):
-            raise StreamError(f"record ({slot},{pe}) out of range")
+            raise StreamError(f"slot{slot}/pe{pe}: record out of range "
+                              f"(rule STR-PARSE)")
         if (slot, pe) in seen:
-            raise StreamError(f"duplicate record ({slot},{pe})")
+            raise StreamError(f"slot{slot}/pe{pe}: duplicate record "
+                              f"(rule STR-PARSE)")
         seen.add((slot, pe))
         ops = [_parse_sel(v[col[f"op{o}"]]) for o in range(3)]
         force = [(int(v[col[f"op{o}_fb"]]), int(v[col[f"op{o}_fv"]]))
@@ -205,7 +210,8 @@ def _alu(opcode: str, a: int, b: int, c: int, bits: int) -> int:
     elif opcode == "select":
         r = b if a != 0 else c
     else:
-        raise StreamError(f"unknown opcode mnemonic {opcode!r}")
+        raise StreamError(f"unknown opcode mnemonic {opcode!r} "
+                          f"(rule STR-OPC)")
     return _wrap(r, bits)
 
 
@@ -237,10 +243,12 @@ def _resolve(s: InstructionStream, m: _Machine, pe: int, imm: int,
     try:
         d = _IN_DIRS.index(kind)
     except ValueError:
-        raise StreamError(f"unknown mux select {kind!r}") from None
+        raise StreamError(f"pe{pe}: unknown mux select {kind!r} "
+                          f"(rule STR-SEL-RANGE)") from None
     nbr = s.neighbors[pe][d]
     if nbr is None:
-        raise StreamError(f"pe{pe} reads {kind} but has no neighbour there")
+        raise StreamError(f"pe{pe} reads {kind} but has no neighbour there "
+                          f"(rule STR-SEL-RANGE)")
     return m.xo[nbr][_OPP[d]]
 
 

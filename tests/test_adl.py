@@ -66,6 +66,37 @@ def test_validate_rejects_duplicate_bank_ids():
         arch.validate()
 
 
+def test_validate_rejects_degenerate_torus():
+    """A 1-wide torus wraps a PE onto itself — an out-of-range neighbour
+    reference that used to surface only deep in config generation."""
+    arch = CGRAArch(name="t", rows=1, cols=4, torus=True,
+                    banks=[MemBank(0, 1024, (0,))])
+    with pytest.raises(ValueError, match="wraps a PE onto itself"):
+        arch.validate()
+    # 2x2 tori are fine (every direction reaches a distinct PE)
+    CGRAArch(name="t2", rows=2, cols=2, torus=True,
+             banks=[MemBank(0, 1024, (0,))]).validate()
+
+
+def test_validate_rejects_zero_or_odd_bank_sizes():
+    """Zero/odd size_bytes collapse a bank to 0 words, so its derived
+    word offsets overlap the next bank's."""
+    arch = cluster_4x4()
+    arch.banks = [MemBank(0, 0, (0,)), MemBank(1, 1024, (3,))]
+    with pytest.raises(ValueError, match="positive multiple of 2"):
+        arch.validate()
+    arch.banks = [MemBank(0, 1023, (0,))]
+    with pytest.raises(ValueError, match="positive multiple of 2"):
+        arch.validate()
+
+
+def test_validate_rejects_duplicate_bus_pes():
+    arch = cluster_4x4()
+    arch.banks = [MemBank(0, 1024, (0, 4, 0))]
+    with pytest.raises(ValueError, match="more than once on its bus"):
+        arch.validate()
+
+
 def test_validate_rejects_out_of_range_cluster_pes():
     arch = cluster_4x4()
     arch.clusters = [[0, 1, 99]]
